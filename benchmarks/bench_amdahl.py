@@ -1,0 +1,94 @@
+"""Paper Fig 1 + Contribution 1 (load balancing): the serial fraction.
+
+The original DiSCO solves P s = r iteratively on the MASTER only — all
+other nodes idle. Amdahl: serial fraction s caps speedup at 1/(s + (1-s)/m).
+We measure the fraction of one outer iteration spent in the preconditioner
+apply (the serial part under master-only execution) for SAG vs Woodbury
+and report the implied speedup ceiling on m=4 (the paper's EC2 cluster)
+and m=256 (a v5e pod).
+
+The apply itself is timed on one device; in DiSCO-F the Woodbury solve is
+block-diagonal and runs *sharded* on every node (serial fraction ~0).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save_json, table
+from repro.core.preconditioner import WoodburyPreconditioner, sag_solve
+from repro.data.synthetic import make_glm_data
+
+
+def _time(f, *a, reps=10):
+    f(*a)[0].block_until_ready() if isinstance(f(*a), tuple) else \
+        f(*a).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r = f(*a)
+        (r[0] if isinstance(r, tuple) else r).block_until_ready()
+    return (time.perf_counter() - t0) / reps
+
+
+def amdahl(serial_frac, m):
+    return 1.0 / (serial_frac + (1 - serial_frac) / m)
+
+
+def run(d=4096, n=2048, tau=100, pcg_iters=20, quiet=False):
+    X, y, _ = make_glm_data(d=d, n=n, seed=0)
+    X = jnp.asarray(X)
+    c = jnp.asarray(np.random.default_rng(0).random(n) + 0.1, jnp.float32)
+    r = jnp.asarray(np.random.default_rng(1).standard_normal(d), jnp.float32)
+    lam, mu = 1e-4, 1e-2
+
+    # the parallelizable part of one PCG iteration: the HVP
+    hvp = jax.jit(lambda u: X @ (c * (X.T @ u)) / n + lam * u)
+    t_hvp = _time(hvp, r)
+
+    P = WoodburyPreconditioner.build(X[:, :tau], c[:tau], lam, mu)
+    t_wood = _time(jax.jit(P.apply_inv), r)
+    t_sag = _time(jax.jit(
+        lambda rr: sag_solve(X[:, :tau], c[:tau], lam, mu, rr, epochs=5)),
+        r, reps=3)
+
+    rows = []
+    for name, t_pre, dist in (("Woodbury (DiSCO-F, block-diag)", t_wood,
+                               True),
+                              ("Woodbury (DiSCO-S, replicated)", t_wood,
+                               False),
+                              ("SAG x5 (orig. DiSCO, master-only)", t_sag,
+                               False)):
+        # per PCG iteration: parallel hvp + preconditioner apply
+        t_iter = t_hvp + t_pre
+        serial = 0.0 if dist else t_pre / t_iter
+        rows.append({
+            "preconditioner": name,
+            "hvp_ms": t_hvp * 1e3, "apply_ms": t_pre * 1e3,
+            "serial_frac": serial,
+            "speedup_cap_m4": amdahl(serial, 4),
+            "speedup_cap_m256": amdahl(serial, 256)})
+    out = table(rows, ["preconditioner", "hvp_ms", "apply_ms",
+                       "serial_frac", "speedup_cap_m4", "speedup_cap_m256"],
+                title=f"Fig 1 / load balancing — serial fraction "
+                      f"(d={d}, n={n}, tau={tau})")
+    if not quiet:
+        print(out)
+        sag = rows[-1]
+        print(f"[claim] orig. DiSCO serial fraction = "
+              f"{sag['serial_frac']:.0%} (paper observed >50%) — speedup "
+              f"capped at {sag['speedup_cap_m256']:.2f}x on 256 chips; "
+              f"DiSCO-F's block-diagonal Woodbury removes the serial part "
+              f"entirely.")
+    save_json("amdahl_load_balance", rows)
+    return rows
+
+
+def main():
+    return run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Paper contribution 1: closed-form Woodbury preconditioner solve vs the
+original DiSCO's iterative (SAG) inner solver.
+
+Measures (a) wall time per P^{-1} r apply, (b) solution accuracy vs a dense
+LU solve, (c) end-to-end outer iterations. The paper observed >50% of DiSCO
+time spent in the SAG inner solve — on one device the same ratio shows up
+directly in the apply times.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save_json, table
+from repro.core.preconditioner import WoodburyPreconditioner, sag_solve
+
+
+def run(d=2048, tau=100, quiet=False):
+    rng = np.random.default_rng(0)
+    X_tau = jnp.asarray(rng.standard_normal((d, tau)), jnp.float32)
+    c = jnp.asarray(rng.random(tau) + 0.1, jnp.float32)
+    r = jnp.asarray(rng.standard_normal(d), jnp.float32)
+    lam, mu = 1e-4, 1e-2
+
+    P = WoodburyPreconditioner.build(X_tau, c, lam, mu)
+    exact = np.linalg.solve(np.asarray(P.dense(), np.float64),
+                            np.asarray(r, np.float64))
+
+    rows = []
+
+    apply_jit = jax.jit(P.apply_inv)
+    s = apply_jit(r).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(20):
+        s = apply_jit(r).block_until_ready()
+    dt_w = (time.perf_counter() - t0) / 20
+    err = float(np.linalg.norm(np.asarray(s, np.float64) - exact)
+                / np.linalg.norm(exact))
+    rows.append({"solver": "woodbury (Alg 4)", "apply_ms": dt_w * 1e3,
+                 "rel_err": err})
+
+    for epochs in (1, 5, 20):
+        sag_jit = jax.jit(lambda rr: sag_solve(X_tau, c, lam, mu, rr,
+                                               epochs=epochs))
+        s = sag_jit(r).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(5):
+            s = sag_jit(r).block_until_ready()
+        dt = (time.perf_counter() - t0) / 5
+        err = float(np.linalg.norm(np.asarray(s, np.float64) - exact)
+                    / np.linalg.norm(exact))
+        rows.append({"solver": f"SAG x{epochs} epochs (orig. DiSCO)",
+                     "apply_ms": dt * 1e3, "rel_err": err})
+
+    out = table(rows, ["solver", "apply_ms", "rel_err"],
+                title=f"Woodbury vs iterative preconditioner solve "
+                      f"(d={d}, tau={tau})")
+    if not quiet:
+        print(out)
+        w = rows[0]
+        sag20 = rows[-1]
+        print(f"[claim] exact Woodbury is {sag20['apply_ms']/w['apply_ms']:.0f}x "
+              f"faster than SAG@20epochs and exact "
+              f"(err {w['rel_err']:.1e} vs {sag20['rel_err']:.1e}).")
+    save_json("woodbury_vs_sag", rows)
+    return rows
+
+
+def main():
+    return run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Shared benchmark harness: result tables, JSON output, tiny timers."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def save_json(name: str, payload):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return path
+
+
+def table(rows: list[dict], cols: list[str], title: str = "") -> str:
+    widths = {c: max(len(c), *(len(_fmt(r.get(c, ""))) for r in rows))
+              for c in cols}
+    out = []
+    if title:
+        out.append(f"== {title} ==")
+    out.append("  ".join(c.ljust(widths[c]) for c in cols))
+    out.append("  ".join("-" * widths[c] for c in cols))
+    for r in rows:
+        out.append("  ".join(_fmt(r.get(c, "")).ljust(widths[c])
+                             for c in cols))
+    return "\n".join(out)
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        if v == 0:
+            return "0"
+        if abs(v) >= 1e4 or abs(v) < 1e-3:
+            return f"{v:.3e}"
+        return f"{v:.4g}"
+    return str(v)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.elapsed = time.perf_counter() - self.t0

@@ -1,0 +1,64 @@
+"""Render the §Dry-run / §Roofline markdown tables from the result JSONs.
+
+    python -m benchmarks.report [--results dryrun_results.json]
+                                [--costs costprobe_results.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from benchmarks.roofline import DEFAULT_COSTS, DEFAULT_RESULTS, analyze, \
+    load_merged
+
+
+def dryrun_table(records):
+    lines = ["| arch | shape | mesh | fits | args+temp GiB | compile s |",
+             "|---|---|---|---|---|---|"]
+    for r in records:
+        if r["status"] == "skipped":
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"FAILED | — | — |")
+            continue
+        gib = (r["memory"]["temp_bytes"]
+               + r["memory"]["argument_bytes"]) / 2**30
+        fits = "yes" if gib <= 16 else f"no ({gib:.0f} raw)"
+        lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | {fits} "
+                     f"| {gib:.1f} | {r['compile_s']} |")
+    return "\n".join(lines)
+
+
+def roofline_table(rows):
+    lines = ["| arch | shape | compute s | memory s | collective s | "
+             "dominant | MF/HLO | peak GiB |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3g} | "
+            f"{r['memory_s']:.3g} | {r['collective_s']:.3g} | "
+            f"{r['dominant']} | {r['model_flops_frac']:.2f} | "
+            f"{r['peak_gib']:.1f} |")
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default=DEFAULT_RESULTS)
+    ap.add_argument("--costs", default=DEFAULT_COSTS)
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--section", default="roofline",
+                    choices=["roofline", "dryrun"])
+    args = ap.parse_args(argv)
+    records = load_merged(args.results, args.costs)
+    if args.section == "dryrun":
+        print(dryrun_table(records))
+    else:
+        rows = analyze(records, args.mesh)
+        rows.sort(key=lambda r: (r["shape"], -r["step_s_bound"]))
+        print(roofline_table(rows))
+
+
+if __name__ == "__main__":
+    main()

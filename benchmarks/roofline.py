@@ -1,0 +1,137 @@
+"""Roofline analysis from the dry-run's compiled artifacts (deliverable g).
+
+Per (arch x shape x mesh):
+    compute term    = HLO_FLOPs / (chips x 197e12 FLOP/s bf16)
+    memory term     = HLO_bytes / (chips x 819e9 B/s HBM)
+    collective term = collective_bytes / (chips x 50e9 B/s ICI link)
+
+Numerators are per-device (GSPMD cost_analysis is per-partition and the
+collective parser sums per-device operand bytes), denominators per-chip —
+equivalent to global/global.
+
+TWO sources are merged:
+  * dryrun_results.json   — full-depth configs: memory_analysis (fits HBM?)
+                            and compile proof. Its cost numbers UNDERCOUNT
+                            lax.scan bodies (counted once, not x trip count).
+  * costprobe_results.json — scan-corrected FLOPs / bytes / collective bytes
+                            via unrolled 1,2-layer probes + exact linear
+                            extrapolation (launch/costprobe.py).
+
+MODEL_FLOPS = 6*N*D (train) / 2*N*D (prefill/decode), N = active params for
+MoE. The ratio MODEL_FLOPS / HLO_FLOPS exposes remat recompute, MoE capacity
+overhead (cf x), and redundancy waste.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from benchmarks.common import save_json, table
+from repro.configs import INPUT_SHAPES, get_config
+from repro.launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+
+_HERE = os.path.dirname(__file__)
+DEFAULT_RESULTS = os.path.join(_HERE, "..", "dryrun_results.json")
+DEFAULT_COSTS = os.path.join(_HERE, "..", "costprobe_results.json")
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Useful-math FLOPs per step (6ND train / 2ND inference), global."""
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    n_params = cfg.active_param_count() if cfg.moe else cfg.param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_params * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_params * tokens
+    return 2.0 * n_params * shape.global_batch   # decode: ONE token/seq
+
+
+def load_merged(results_path: str, costs_path: str | None) -> list[dict]:
+    with open(results_path) as f:
+        records = json.load(f)
+    probes = {}
+    if costs_path and os.path.exists(costs_path):
+        with open(costs_path) as f:
+            for p in json.load(f):
+                if p.get("status") == "ok":
+                    probes[(p["arch"], p["shape"], p["mesh"])] = p
+    merged = []
+    for r in records:
+        if r["status"] != "ok":
+            merged.append(r)
+            continue
+        key = (r["arch"], r["shape"], r["mesh"])
+        p = probes.get(key)
+        r = dict(r)
+        if p:
+            r["flops_per_device"] = p["flops_per_device"]
+            r["bytes_per_device"] = p["bytes_per_device"]
+            r["collective_bytes_per_device"] = \
+                p["collective_bytes_per_device"]
+            r["cost_source"] = "costprobe"
+        else:
+            r["collective_bytes_per_device"] = \
+                r["collectives"]["total_bytes"]
+            r["cost_source"] = "dryrun(scan-undercounted)"
+        merged.append(r)
+    return merged
+
+
+def analyze(records: list[dict], mesh_filter: str = "16x16") -> list[dict]:
+    rows = []
+    for r in records:
+        if r["status"] != "ok" or r["mesh"] != mesh_filter:
+            continue
+        chips = r["devices"]
+        flops_dev = r["flops_per_device"]
+        bytes_dev = r["bytes_per_device"]
+        coll_dev = r["collective_bytes_per_device"]
+        terms = {"compute": flops_dev / PEAK_FLOPS_BF16,
+                 "memory": bytes_dev / HBM_BW,
+                 "collective": coll_dev / ICI_BW_PER_LINK}
+        dominant = max(terms, key=terms.get)
+        mf = model_flops(r["arch"], r["shape"]) / chips
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "compute_s": terms["compute"], "memory_s": terms["memory"],
+            "collective_s": terms["collective"], "dominant": dominant,
+            "model_flops_frac": mf / flops_dev if flops_dev else 0.0,
+            "step_s_bound": max(terms.values()),
+            "roofline_frac": (terms["compute"] / max(terms.values())
+                              if max(terms.values()) else 0.0),
+            "peak_gib": r["memory"]["temp_bytes"] / (1 << 30),
+            "cost_source": r.get("cost_source", "?"),
+        })
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default=DEFAULT_RESULTS)
+    ap.add_argument("--costs", default=DEFAULT_COSTS)
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args(argv)
+    records = load_merged(args.results, args.costs)
+    rows = analyze(records, args.mesh)
+    rows.sort(key=lambda r: (r["shape"], -r["step_s_bound"]))
+    print(table(rows, ["arch", "shape", "compute_s", "memory_s",
+                       "collective_s", "dominant", "roofline_frac",
+                       "model_flops_frac", "peak_gib"],
+                title=f"Roofline terms per device ({args.mesh}, TPU v5e; "
+                      f"costs: scan-corrected probe)"))
+    from collections import Counter
+    doms = Counter(r["dominant"] for r in rows)
+    print(f"\nbottleneck distribution: {dict(doms)}")
+    n_probe = sum(r["cost_source"] == "costprobe" for r in rows)
+    print(f"cost source: {n_probe}/{len(rows)} combos from the "
+          f"scan-corrected probe")
+    save_json(f"roofline_{args.mesh.replace('x', '_')}", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Benchmark harness entry point: ``python -m benchmarks.run``.
+
+Runs every paper-table/figure benchmark (fig3, fig4, fig5, table4,
+woodbury) and, if a dry-run results file exists, the roofline analysis.
+``--quick`` runs a reduced set for CI smoke.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fig4/fig5/table4/woodbury only (no fig3 sweep)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: fig3,fig4,fig5,table4,"
+                         "woodbury,amdahl,roofline")
+    args = ap.parse_args(argv)
+
+    selected = set(args.only.split(",")) if args.only else None
+
+    def want(name):
+        if selected is not None:
+            return name in selected
+        if args.quick:
+            return name != "fig3"
+        return True
+
+    t0 = time.perf_counter()
+    print("=" * 72)
+    print("repro benchmark suite — DiSCO-S/F (Ma & Takac 2016) in JAX")
+    print("=" * 72)
+
+    if want("table4"):
+        from benchmarks import bench_table4_comm
+        bench_table4_comm.main()
+        print()
+    if want("woodbury"):
+        from benchmarks import bench_woodbury
+        bench_woodbury.main()
+        print()
+    if want("amdahl"):
+        from benchmarks import bench_amdahl
+        bench_amdahl.main()
+        print()
+    if want("fig4"):
+        from benchmarks import bench_fig4_tau
+        bench_fig4_tau.main()
+        print()
+    if want("fig5"):
+        from benchmarks import bench_fig5_subsample
+        bench_fig5_subsample.main()
+        print()
+    if want("fig3"):
+        from benchmarks import bench_fig3_algorithms
+        bench_fig3_algorithms.main()
+        print()
+    if want("roofline"):
+        from benchmarks import roofline
+        if os.path.exists(roofline.DEFAULT_RESULTS):
+            roofline.main(["--mesh", "16x16"])
+            print()
+            roofline.main(["--mesh", "2x16x16"])
+        else:
+            print("[roofline] skipped: no dryrun_results.json — run "
+                  "PYTHONPATH=src python -m repro.launch.dryrun --all "
+                  "--mesh both --json dryrun_results.json")
+
+    print(f"\nbenchmark suite done in {time.perf_counter() - t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,83 @@
+"""End-to-end LM training driver with the GGN-DiSCO optimizer (beyond-paper).
+
+    PYTHONPATH=src python examples/train_lm.py --preset small --steps 200
+    PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300 \
+        --optimizer adamw          # the ~100M-param configuration
+
+Presets:
+  small  ~6M params  (CI-friendly: a couple of minutes on CPU)
+  100m   ~103M params (olmo-family block at d_model=768, 12 layers) — the
+         assignment's "train a ~100M model for a few hundred steps" driver;
+         on CPU budget several hours with disco, ~1 h with adamw.
+
+Checkpoints land in ./checkpoints/<preset>.npz and training resumes from
+them automatically (delete to restart).
+"""
+import argparse
+import os
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import repro.configs as cfgs
+from repro.data.tokens import TokenPipeline
+from repro.optim import AdamWConfig, GGNDiscoConfig
+from repro.train import TrainConfig, train
+
+PRESETS = {
+    # name: (d_model, layers, heads, d_ff, vocab, seq, batch)
+    "small": dict(d_model=256, num_layers=4, num_heads=4, num_kv_heads=4,
+                  d_ff=1024, vocab_size=8192, head_dim=64,
+                  seq=128, batch=8),
+    "100m": dict(d_model=768, num_layers=12, num_heads=12, num_kv_heads=12,
+                 d_ff=3072, vocab_size=50304, head_dim=64,
+                 seq=512, batch=8),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="small", choices=list(PRESETS))
+    ap.add_argument("--optimizer", default="disco",
+                    choices=["disco", "adamw"])
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    p = PRESETS[args.preset]
+    seq = args.seq or p["seq"]
+    batch = args.batch or p["batch"]
+    base = cfgs.get_smoke_config("olmo_1b")
+    cfg = base.replace(dtype="float32",
+                       **{k: v for k, v in p.items()
+                          if k not in ("seq", "batch")})
+    n_params = cfg.param_count()
+    print(f"preset={args.preset}: {n_params/1e6:.1f}M params, "
+          f"seq={seq}, batch={batch}, optimizer={args.optimizer}")
+
+    pipe = TokenPipeline(vocab_size=cfg.vocab_size, seq_len=seq,
+                         global_batch=batch)
+    ckpt = args.ckpt or os.path.join("checkpoints", args.preset)
+    tc = TrainConfig(
+        optimizer=args.optimizer,
+        steps=args.steps,
+        log_every=max(1, args.steps // 40),
+        ckpt_path=ckpt, ckpt_every=max(10, args.steps // 4),
+        adamw=AdamWConfig(lr=1e-3, warmup_steps=max(10, args.steps // 20),
+                          total_steps=args.steps),
+        disco=GGNDiscoConfig(tau=min(8, batch), max_pcg=8,
+                             pcg_rel_tol=0.3, lam=1e-5))
+    res = train(cfg, tc, pipe)
+    first, last = res.history[0]["loss"], res.history[-1]["loss"]
+    print(f"\nloss {first:.3f} -> {last:.3f} "
+          f"({res.steps_per_sec:.2f} steps/s)")
+    from repro.train import evaluate
+    m = evaluate(cfg, res.params, pipe, steps=4)
+    print(f"held-out: ce={m['ce']:.3f} ppl={m['ppl']:.1f} "
+          f"acc={m['accuracy']:.3f}")
+    assert last < first, "training made no progress"
+
+
+if __name__ == "__main__":
+    main()

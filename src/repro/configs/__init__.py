@@ -1,0 +1,43 @@
+"""Registry of assigned architectures (+ the paper's own GLM problems)."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ModelConfig, InputShape, INPUT_SHAPES
+
+ARCHS = [
+    "whisper_medium", "olmo_1b", "mixtral_8x7b", "chatglm3_6b",
+    "qwen3_moe_30b_a3b", "falcon_mamba_7b", "qwen2_vl_72b",
+    "phi3_medium_14b", "qwen2_5_32b", "zamba2_2_7b",
+]
+
+_ALIAS = {a.replace("_", "-"): a for a in ARCHS}
+_ALIAS.update({
+    "whisper-medium": "whisper_medium", "olmo-1b": "olmo_1b",
+    "mixtral-8x7b": "mixtral_8x7b", "chatglm3-6b": "chatglm3_6b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "falcon-mamba-7b": "falcon_mamba_7b", "qwen2-vl-72b": "qwen2_vl_72b",
+    "phi3-medium-14b": "phi3_medium_14b", "qwen2.5-32b": "qwen2_5_32b",
+    "zamba2-2.7b": "zamba2_2_7b",
+})
+
+
+def _module(name: str):
+    mod_name = _ALIAS.get(name, name).replace("-", "_").replace(".", "_")
+    return importlib.import_module(f"repro.configs.{mod_name}")
+
+
+def get_config(name: str) -> ModelConfig:
+    return _module(name).config()
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    return _module(name).smoke()
+
+
+def list_archs() -> list[str]:
+    return list(ARCHS)
+
+
+__all__ = ["ModelConfig", "InputShape", "INPUT_SHAPES", "ARCHS",
+           "get_config", "get_smoke_config", "list_archs"]

@@ -1,0 +1,25 @@
+"""qwen2-vl-72b [vlm] — M-RoPE, dynamic resolution (frontend stubbed).
+[arXiv:2409.12191]
+
+80L d_model=8192 64H (GQA kv=8) d_ff=29568 vocab=152064. The ViT encoder +
+projector are stubbed per assignment: ``extra_embeddings`` (B, S, d_model)
+carries projected patch embeddings added at image positions; positions are
+(t, h, w) M-RoPE triplets.
+"""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-vl-72b", arch_type="vlm",
+        num_layers=80, d_model=8192, num_heads=64, num_kv_heads=8,
+        d_ff=29568, vocab_size=152064, head_dim=128,
+        attention="full", rope="mrope", rope_theta=1e6, qkv_bias=True,
+        norm="rmsnorm", mlp="swiglu", tie_embeddings=False,
+        frontend="vision")
+
+
+def smoke() -> ModelConfig:
+    return config().replace(num_layers=2, d_model=128, num_heads=4,
+                            num_kv_heads=2, head_dim=32, d_ff=256,
+                            vocab_size=512, dtype="float32")

@@ -1,0 +1,61 @@
+"""ShapeDtypeStruct input specs for every (arch x input-shape) combination.
+
+``input_specs(cfg, shape)`` returns the exact kwargs pytree the corresponding
+step function is lowered with — weak-type-correct stand-ins, no allocation.
+
+Decode shapes return (tokens, cache) for ``serve_step``; train/prefill return
+a batch dict for ``train_step`` / ``prefill``. Frontend stubs appear here as
+embedding tensors of the right shape (audio frames / VLM patch embeddings).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape, with_labels: bool):
+    B, S = shape.global_batch, shape.seq_len
+    batch = {"tokens": _sds((B, S), jnp.int32)}
+    if with_labels:
+        batch["labels"] = _sds((B, S), jnp.int32)
+    if cfg.arch_type == "audio":
+        batch["frames"] = _sds((B, cfg.encoder_len, cfg.d_model),
+                               cfg.jnp_dtype)
+    if cfg.arch_type == "vlm":
+        batch["extra_embeddings"] = _sds((B, S, cfg.d_model), cfg.jnp_dtype)
+        batch["positions"] = _sds((B, S, 3), jnp.int32)
+    return batch
+
+
+def decode_specs(cfg: ModelConfig, shape: InputShape):
+    """(tokens, cache) specs: one new token against a seq_len-deep cache."""
+    from repro.models.model import init_cache
+    B = shape.global_batch
+    cache = jax.eval_shape(
+        lambda: init_cache(cfg, B, shape.seq_len, cfg.jnp_dtype))
+    tokens = _sds((B, 1), jnp.int32)
+    return tokens, cache
+
+
+def input_specs(cfg: ModelConfig, shape_name: str):
+    shape = INPUT_SHAPES[shape_name]
+    if shape.kind == "train":
+        return {"batch": batch_specs(cfg, shape, with_labels=True)}
+    if shape.kind == "prefill":
+        return {"batch": batch_specs(cfg, shape, with_labels=False)}
+    tokens, cache = decode_specs(cfg, shape)
+    return {"tokens": tokens, "cache": cache}
+
+
+def is_applicable(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    """(runs?, reason-if-skipped) — the DESIGN.md §Arch-applicability rules."""
+    shape = INPUT_SHAPES[shape_name]
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, "pure full-attention arch: 500k decode is quadratic"
+    return True, ""

@@ -1,0 +1,26 @@
+"""whisper-medium [audio] — enc-dec, conv frontend stubbed. [arXiv:2212.04356]
+
+24L d_model=1024 16H (GQA kv=16) d_ff=4096 vocab=51865. Encoder consumes
+precomputed 1500-frame embeddings (mel+conv stub per assignment). Decoder
+positions are sinusoidal so the assigned 4k/32k decoder shapes lower (real
+Whisper caps decode at 448 tokens — noted in DESIGN.md).
+"""
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-medium", arch_type="audio",
+        num_layers=24, d_model=1024, num_heads=16, num_kv_heads=16,
+        d_ff=4096, vocab_size=51865, head_dim=64,
+        attention="full", rope="sinusoidal", qkv_bias=True,
+        norm="layernorm", mlp="gelu", tie_embeddings=True,
+        encoder_layers=24, cross_attention=True, encoder_len=1500,
+        frontend="audio")
+
+
+def smoke() -> ModelConfig:
+    return config().replace(
+        num_layers=2, encoder_layers=2, d_model=128, num_heads=4,
+        num_kv_heads=4, head_dim=32, d_ff=256, vocab_size=512,
+        encoder_len=64, dtype="float32")

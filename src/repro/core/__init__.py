@@ -1,0 +1,15 @@
+"""Paper core: DiSCO-S / DiSCO-F distributed inexact damped Newton."""
+from repro.core.losses import get_loss, LOSSES, QUADRATIC, LOGISTIC, SQUARED_HINGE
+from repro.core.glm import GLMProblem
+from repro.core.preconditioner import (WoodburyPreconditioner,
+                                       IdentityPreconditioner, sag_solve)
+from repro.core.pcg import pcg_samples, pcg_features, PCGResult
+from repro.core.disco import DiscoConfig, DiscoSolver, DiscoResult, disco_fit
+from repro.core import comm
+
+__all__ = [
+    "get_loss", "LOSSES", "QUADRATIC", "LOGISTIC", "SQUARED_HINGE",
+    "GLMProblem", "WoodburyPreconditioner", "IdentityPreconditioner",
+    "sag_solve", "pcg_samples", "pcg_features", "PCGResult",
+    "DiscoConfig", "DiscoSolver", "DiscoResult", "disco_fit", "comm",
+]

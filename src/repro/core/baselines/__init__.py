@@ -1,0 +1,6 @@
+from repro.core.baselines.dane import DaneConfig, dane_fit
+from repro.core.baselines.cocoa import CocoaConfig, cocoa_fit
+from repro.core.baselines.gd import GDConfig, gd_fit
+
+__all__ = ["DaneConfig", "dane_fit", "CocoaConfig", "cocoa_fit",
+           "GDConfig", "gd_fit"]

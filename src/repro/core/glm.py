@@ -1,0 +1,71 @@
+"""Regularized empirical risk minimization problem (P) on a GLM.
+
+    f(w) = (1/n) sum_i phi(<w, x_i>, y_i) + (lam/2) ||w||^2
+
+The data matrix follows the paper's convention X in R^{d x n} (features x
+samples). All routines here are *local* (single logical array); the
+distributed variants in ``pcg.py`` shard X by columns (DiSCO-S) or rows
+(DiSCO-F) and call these building blocks inside ``shard_map``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core.losses import Loss, get_loss
+
+
+@dataclasses.dataclass(frozen=True)
+class GLMProblem:
+    """Holds the (local or global) data and problem constants."""
+
+    X: jnp.ndarray  # (d, n)
+    y: jnp.ndarray  # (n,)
+    loss: Loss
+    lam: float
+
+    @property
+    def d(self) -> int:
+        return self.X.shape[0]
+
+    @property
+    def n(self) -> int:
+        return self.X.shape[1]
+
+    @classmethod
+    def create(cls, X, y, loss="logistic", lam=1e-4) -> "GLMProblem":
+        if isinstance(loss, str):
+            loss = get_loss(loss)
+        return cls(X=jnp.asarray(X), y=jnp.asarray(y), loss=loss, lam=lam)
+
+    # -- margins -----------------------------------------------------------
+    def margins(self, w: jnp.ndarray) -> jnp.ndarray:
+        """a = X^T w, shape (n,)."""
+        return self.X.T @ w
+
+    # -- objective ---------------------------------------------------------
+    def value(self, w: jnp.ndarray) -> jnp.ndarray:
+        a = self.margins(w)
+        return jnp.mean(self.loss.value(a, self.y)) + 0.5 * self.lam * jnp.vdot(w, w)
+
+    def grad(self, w: jnp.ndarray) -> jnp.ndarray:
+        a = self.margins(w)
+        return self.X @ self.loss.d1(a, self.y) / self.n + self.lam * w
+
+    # -- curvature ---------------------------------------------------------
+    def hess_coeffs(self, w: jnp.ndarray) -> jnp.ndarray:
+        """c_i = phi''(<w, x_i>, y_i); H = (1/n) X diag(c) X^T + lam I."""
+        return self.loss.d2(self.margins(w), self.y)
+
+    def hvp(self, w: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+        return self.hvp_with_coeffs(self.hess_coeffs(w), u)
+
+    def hvp_with_coeffs(self, c: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+        """H u with precomputed coefficients (margins fixed across PCG)."""
+        return self.X @ (c * (self.X.T @ u)) / self.n + self.lam * u
+
+    def hessian(self, w: jnp.ndarray) -> jnp.ndarray:
+        """Dense Hessian — only for tests / tiny problems."""
+        c = self.hess_coeffs(w)
+        return (self.X * c) @ self.X.T / self.n + self.lam * jnp.eye(self.d, dtype=self.X.dtype)

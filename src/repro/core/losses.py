@@ -1,0 +1,84 @@
+"""Self-concordant loss functions for regularized ERM (paper Table 1).
+
+Each loss operates on the margin ``a = <w, x>`` and label ``y``. We expose
+value / first / second derivatives w.r.t. the margin, which is all that GLM
+gradient and Hessian computations need:
+
+    grad f(w)  = (1/n) X phi'(X^T w, y) + lam * w
+    H(w) u     = (1/n) X (phi''(X^T w, y) * (X^T u)) + lam * u
+
+``M`` is the self-concordance parameter from Assumption 1.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Loss:
+    """A scalar loss phi(a, y) on the margin with its derivatives."""
+
+    name: str
+    value: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+    d1: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+    d2: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+    M: float  # self-concordance constant (Assumption 1)
+
+
+def _quadratic_value(a, y):
+    return (y - a) ** 2
+
+
+def _quadratic_d1(a, y):
+    return 2.0 * (a - y)
+
+
+def _quadratic_d2(a, y):
+    return jnp.full_like(a, 2.0)
+
+
+def _sq_hinge_value(a, y):
+    # Standard smooth squared hinge for y in {-1, +1}. (The paper's Table 1
+    # writes max(0, y - a)^2; the classification form below is the one its
+    # experiments use. M = 0 either way since the loss is piecewise quadratic.)
+    return jnp.maximum(0.0, 1.0 - y * a) ** 2
+
+
+def _sq_hinge_d1(a, y):
+    return -2.0 * y * jnp.maximum(0.0, 1.0 - y * a)
+
+
+def _sq_hinge_d2(a, y):
+    return 2.0 * (1.0 - y * a > 0).astype(a.dtype)
+
+
+def _logistic_value(a, y):
+    # log(1 + exp(-y a)), numerically stable.
+    return jnp.logaddexp(0.0, -y * a)
+
+
+def _logistic_d1(a, y):
+    return -y * jax.nn.sigmoid(-y * a)
+
+
+def _logistic_d2(a, y):
+    s = jax.nn.sigmoid(y * a)
+    return s * (1.0 - s)
+
+
+QUADRATIC = Loss("quadratic", _quadratic_value, _quadratic_d1, _quadratic_d2, M=0.0)
+SQUARED_HINGE = Loss("squared_hinge", _sq_hinge_value, _sq_hinge_d1, _sq_hinge_d2, M=0.0)
+LOGISTIC = Loss("logistic", _logistic_value, _logistic_d1, _logistic_d2, M=1.0)
+
+LOSSES = {l.name: l for l in (QUADRATIC, SQUARED_HINGE, LOGISTIC)}
+
+
+def get_loss(name: str) -> Loss:
+    try:
+        return LOSSES[name]
+    except KeyError:
+        raise ValueError(f"unknown loss {name!r}; available: {sorted(LOSSES)}")

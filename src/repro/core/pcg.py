@@ -1,0 +1,176 @@
+"""Distributed Preconditioned Conjugate Gradient — paper Algorithms 2 and 3.
+
+Both variants solve the Newton system  H v = g,  H = f''(w_k)  inexactly to
+``||r|| <= eps`` and return (v, delta, iters) with delta = sqrt(v^T H v) for
+the damped step of Algorithm 1.
+
+* ``pcg_samples``  (Algorithm 2, DiSCO-S): data sharded by **samples** along
+  the ``data`` mesh axis. PCG state vectors are replicated R^d; each H u
+  costs one d-vector all-reduce (the paper's broadcast-u + reduceAll-Hu pair).
+  The preconditioner uses tau samples held replicated (the paper's "first tau
+  samples of the master", broadcast once).
+
+* ``pcg_features`` (Algorithm 3, DiSCO-F): data sharded by **features** along
+  the ``model`` mesh axis. Every PCG vector lives sharded as R^{d_j}; each
+  H u costs one n-vector all-reduce plus two scalar all-reduces, and the
+  Woodbury preconditioner is block-diagonal and fully local.
+
+These functions are written to run **inside shard_map** — all cross-device
+traffic is explicit ``lax.psum``. Single-device meshes degenerate gracefully
+(psum over an axis of size 1).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.preconditioner import WoodburyPreconditioner, sag_solve
+
+
+class PCGResult(NamedTuple):
+    v: jnp.ndarray        # inexact Newton direction (local shard in DiSCO-F)
+    delta: jnp.ndarray    # sqrt(v^T H v)  (scalar, replicated)
+    iters: jnp.ndarray    # number of PCG iterations performed
+    r_norm: jnp.ndarray   # final residual norm
+
+
+def _pcg_loop(hvp, apply_precond, psum_dot, g, eps, max_iter, dtype):
+    """Shared PCG skeleton.
+
+    hvp(u) -> H u            (performs its own collectives)
+    apply_precond(r) -> s    (local / replicated, zero comm by construction)
+    psum_dot(a, b) -> scalar <a, b> globally (psum for sharded vectors,
+                      plain vdot for replicated ones)
+    """
+    v0 = jnp.zeros_like(g)
+    r0 = g
+    s0 = apply_precond(r0)
+    u0 = s0
+    Hv0 = jnp.zeros_like(g)
+    rs0 = psum_dot(r0, s0)
+
+    def cond(state):
+        t, _, r, _, _, _, _ = state
+        rn = jnp.sqrt(psum_dot(r, r))
+        return jnp.logical_and(t < max_iter, rn > eps)
+
+    def body(state):
+        t, v, r, s, u, Hv, rs = state
+        Hu = hvp(u)
+        alpha = rs / psum_dot(u, Hu)
+        v = v + alpha * u
+        Hv = Hv + alpha * Hu
+        r_new = r - alpha * Hu
+        s_new = apply_precond(r_new)
+        rs_new = psum_dot(r_new, s_new)
+        beta = rs_new / rs
+        u_new = s_new + beta * u
+        return (t + 1, v, r_new, s_new, u_new, Hv, rs_new)
+
+    state = (jnp.zeros((), jnp.int32), v0, r0, s0, u0, Hv0, rs0)
+    t, v, r, s, u, Hv, rs = lax.while_loop(cond, body, state)
+    delta = jnp.sqrt(jnp.maximum(psum_dot(v, Hv), 0.0))
+    r_norm = jnp.sqrt(psum_dot(r, r))
+    return PCGResult(v=v, delta=delta, iters=t, r_norm=r_norm)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2 — DiSCO-S (sample partitioning)
+# ---------------------------------------------------------------------------
+
+def pcg_samples(X_loc, coeffs_loc, n_global, lam, g, eps, max_iter,
+                X_tau=None, coeffs_tau=None, mu=0.0, axis_name="data",
+                precond="woodbury", sag_epochs=5, use_kernel=False):
+    """Runs inside shard_map over ``axis_name``.
+
+    X_loc       : (d, n_loc) local sample columns
+    coeffs_loc  : (n_loc,) phi'' at w_k (already masked/scaled if the
+                  Hessian is subsampled, paper §5.4)
+    g           : (d,) replicated gradient
+    X_tau       : (d, tau) replicated preconditioner samples ("master's"
+                  first tau columns, broadcast once per outer iteration)
+    precond     : 'woodbury' (DiSCO-S), 'sag' (original DiSCO), 'none' (CG)
+    """
+    n_global = jnp.asarray(n_global, X_loc.dtype)
+
+    if use_kernel:
+        # Pallas two-pass HVP (kernels/glm_hvp.py) on the local shard; the
+        # cross-device reduction stays a psum here, outside the kernel.
+        from repro.kernels import ops as kops
+
+        def hvp(u):
+            z = kops.xt_u(X_loc, u)
+            y = kops.x_cz_local(X_loc, coeffs_loc, z)
+            return lax.psum(y, axis_name) / n_global + lam * u
+    else:
+        def hvp(u):
+            local = X_loc @ (coeffs_loc * (X_loc.T @ u))
+            return lax.psum(local, axis_name) / n_global + lam * u
+
+    if precond == "woodbury":
+        P = WoodburyPreconditioner.build(X_tau, coeffs_tau, lam, mu)
+        apply_precond = P.apply_inv
+    elif precond == "sag":
+        # original DiSCO: iterative inner solve, replicated on every device
+        # (the master bottleneck, see DESIGN.md §2)
+        def apply_precond(r):
+            return sag_solve(X_tau, coeffs_tau, lam, mu, r, epochs=sag_epochs)
+    elif precond == "none":
+        apply_precond = lambda r: r
+    else:
+        raise ValueError(f"unknown precond {precond!r}")
+
+    # state vectors are replicated -> dots are local
+    psum_dot = lambda a, b: jnp.vdot(a, b)
+    return _pcg_loop(hvp, apply_precond, psum_dot, g, eps, max_iter, X_loc.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 3 — DiSCO-F (feature partitioning)
+# ---------------------------------------------------------------------------
+
+def pcg_features(X_loc, coeffs, n_global, lam, g_loc, eps, max_iter,
+                 tau_idx=None, coeffs_tau=None, mu=0.0, axis_name="model",
+                 precond="woodbury", use_kernel=False):
+    """Runs inside shard_map over ``axis_name``.
+
+    X_loc      : (d_j, n) local feature rows (all samples)
+    coeffs     : (n,) phi'' at w_k — *replicated* (derived from the globally
+                 reduced margins, which every shard already holds)
+    g_loc      : (d_j,) local gradient shard
+    tau_idx    : (tau,) indices of the preconditioner samples
+    """
+    n_global = jnp.asarray(n_global, X_loc.dtype)
+
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        def hvp(u_loc):
+            # kernel pass A produces the one communicated n-vector...
+            z = lax.psum(kops.xt_u(X_loc, u_loc), axis_name)
+            # ...pass B fuses the coefficient scale into X @ (c*z)
+            return kops.x_cz_local(X_loc, coeffs, z) / n_global \
+                + lam * u_loc
+    else:
+        def hvp(u_loc):
+            # THE communication of DiSCO-F: one reduceAll of an R^n vector.
+            z = lax.psum(X_loc.T @ u_loc, axis_name)          # (n,)
+            return X_loc @ (coeffs * z) / n_global + lam * u_loc
+
+    if precond == "woodbury":
+        # block-diagonal P^{[j]}: local feature rows of the tau samples,
+        # zero communication (paper contribution 2).
+        X_tau_loc = X_loc[:, tau_idx]
+        P = WoodburyPreconditioner.build_blockdiag(X_tau_loc, coeffs_tau, lam, mu)
+        apply_precond = P.apply_inv
+    elif precond == "none":
+        apply_precond = lambda r: r
+    else:
+        raise ValueError(f"unknown precond {precond!r}")
+
+    # state vectors are sharded -> dots need a scalar psum (cheap)
+    psum_dot = lambda a, b: lax.psum(jnp.vdot(a, b), axis_name)
+    return _pcg_loop(hvp, apply_precond, psum_dot, g_loc, eps, max_iter, X_loc.dtype)

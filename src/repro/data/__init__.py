@@ -1,0 +1,6 @@
+from repro.data.synthetic import make_glm_data, REGIMES
+from repro.data.libsvm import load_libsvm, save_libsvm
+from repro.data.tokens import TokenPipeline, synthetic_token_stream
+
+__all__ = ["make_glm_data", "REGIMES", "load_libsvm", "save_libsvm",
+           "TokenPipeline", "synthetic_token_stream"]

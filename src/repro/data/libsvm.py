@@ -1,0 +1,44 @@
+"""Minimal libsvm-format reader/writer (the paper's datasets ship as libsvm).
+
+Dense materialization — intended for the laptop-scale reproductions, not the
+273 GB splice-site original (see DESIGN.md §6: scale-free claims are
+reproduced on synthetic regime-matched data).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def load_libsvm(path: str, n_features: int | None = None, dtype=np.float32):
+    """Return X (d, n), y (n,) — note the paper's feature-major convention."""
+    rows, ys = [], []
+    max_feat = 0
+    with open(path) as f:
+        for line in f:
+            parts = line.split()
+            if not parts:
+                continue
+            ys.append(float(parts[0]))
+            feats = {}
+            for tok in parts[1:]:
+                idx, val = tok.split(":")
+                idx = int(idx)
+                feats[idx] = float(val)
+                max_feat = max(max_feat, idx)
+            rows.append(feats)
+    d = n_features or max_feat
+    n = len(rows)
+    X = np.zeros((d, n), dtype=dtype)
+    for j, feats in enumerate(rows):
+        for idx, val in feats.items():
+            X[idx - 1, j] = val  # libsvm indices are 1-based
+    return X, np.asarray(ys, dtype=dtype)
+
+
+def save_libsvm(path: str, X: np.ndarray, y: np.ndarray):
+    d, n = X.shape
+    with open(path, "w") as f:
+        for j in range(n):
+            nz = np.nonzero(X[:, j])[0]
+            toks = " ".join(f"{i + 1}:{X[i, j]:.6g}" for i in nz)
+            f.write(f"{y[j]:g} {toks}\n")

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+  glm_hvp         GLM Hessian-vector product (the DiSCO PCG inner loop)
+  flash_attention online-softmax attention (prefill path of the model zoo)
+
+Each kernel ships with a jnp oracle (``ref.py``) and a jit'd wrapper
+(``ops.py``) that dispatches native/interpret/ref by backend.
+"""
+from repro.kernels.ops import glm_hvp, xt_u, flash_attention
+
+__all__ = ["glm_hvp", "xt_u", "flash_attention"]

@@ -1,0 +1,128 @@
+"""Pallas TPU flash attention (prefill hot spot for the model zoo).
+
+Online-softmax attention with causal and sliding-window masking and native
+GQA: the kv BlockSpec index_map folds the q-head -> kv-head mapping
+(h // group) so grouped K/V are never materialised per q-head.
+
+Grid (B, Hq, nq, nk) with nk fastest; running max/denominator/accumulator
+live in VMEM scratch that persists across the nk sweep (the canonical TPU
+flash pattern — output is written once, at the last visited kv block).
+Causal block-skipping is done with ``pl.when`` over whole kv blocks, so the
+skipped blocks cost only the (prefetched) DMA, not MXU time.
+
+VMEM per program at defaults (bq = bk = 512, Dh = 128, f32):
+  q/k/v blocks 3 * 512*128*4 = 768 KiB, acc + stats ~260 KiB  « 16 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref,
+                  acc_ref, m_ref, l_ref,
+                  *, scale, causal, window, block_q, block_k, nk, kv_len):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # block-level causal/window skip: kv block strictly after q block, or
+    # entirely outside the window, contributes nothing.
+    q_start = qi * block_q
+    k_start = ki * block_k
+    relevant = jnp.asarray(True)
+    if causal:
+        relevant &= k_start <= q_start + block_q - 1
+    if window > 0:
+        relevant &= k_start + block_k - 1 >= q_start - window + 1
+
+    @pl.when(relevant)
+    def _attend():
+        q = q_ref[0, 0].astype(jnp.float32)              # (bq, Dh)
+        k = k_ref[0, 0].astype(jnp.float32)              # (bk, Dh)
+        v = v_ref[0, 0].astype(jnp.float32)              # (bk, Dh)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (bq, bk)
+
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        diff = q_pos - k_pos
+        mask = k_pos < kv_len          # tail padding (ops.py) never attends
+        if causal:
+            mask &= diff >= 0
+        if window > 0:
+            mask &= diff < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                              # (bq, 1)
+        m_cur = jnp.max(s, -1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                           # (bq, bk)
+        corr = jnp.exp(m_prev - m_new)                   # (bq, 1)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, scale=None,
+                    block_q=512, block_k=512, interpret=False, kv_len=None):
+    """q: (B, Hq, S, Dh); k/v: (B, Hkv, T, Dh), Hq % Hkv == 0.
+
+    S, T must be multiples of block_q/block_k (ops.py pads). Returns
+    (B, Hq, S, Dh) in q.dtype; softmax + accumulation in f32.
+    """
+    B, Hq, S, Dh = q.shape
+    Hkv, T = k.shape[1], k.shape[2]
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    group = Hq // Hkv
+    block_q = min(block_q, S)
+    block_k = min(block_k, T)
+    assert S % block_q == 0 and T % block_k == 0
+    nq, nk = S // block_q, T // block_k
+    scale = scale if scale is not None else Dh ** -0.5
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, nk=nk,
+        kv_len=kv_len if kv_len is not None else T)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, Dh),
+                         lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, Dh),
+                         lambda b, h, qi, ki: (b, h // group, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, Dh),
+                         lambda b, h, qi, ki: (b, h // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, Dh),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            # f32 VMEM scratch: acc (bq, Dh), running max / denominator (bq, 1)
+            pltpu.VMEM((block_q, Dh), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

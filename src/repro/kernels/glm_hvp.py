@@ -1,0 +1,106 @@
+"""Pallas TPU kernels for the GLM Hessian-vector product (paper hot spot).
+
+The DiSCO PCG inner loop is dominated by  H u = X diag(c) X^T u / n + lam u
+(Algorithms 2/3, step 4). On TPU we split it into two MXU matvec passes over
+the same X tiles:
+
+  pass A  z = X^T u        (kernel ``xt_u``)    — DiSCO-F communicates this
+  pass B  y = X (c * z)    (kernel ``x_cz``)    — the c-scale is fused into
+                                                   the second pass
+
+Tiling: X (d, n) is blocked (bd, bn) with bd/bn multiples of 128 so both the
+matvec contraction and the lane dimension are MXU/VREG aligned. Probe vectors
+are carried as 2-D (1, d)/(n, 1) tiles because TPU Pallas requires >=2-D
+operands with a 128-lane minor dimension. Accumulation over the contraction
+grid axis happens in the f32 output block (revisited across the fastest grid
+dimension), the standard Pallas reduction pattern.
+
+VMEM budget per program (defaults bd = bn = 512, f32):
+  X block 512*512*4 = 1 MiB; vectors <= 4 KiB; acc 2 KiB  — well under 16 MiB,
+  leaving room for double buffering of the X stream from HBM.
+
+The HVP is memory-bound (reads X twice per PCG iteration; arithmetic
+intensity ~= 2 flops/byte per pass), so block shape mainly controls DMA
+efficiency, not MXU occupancy — see EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# ---------------------------------------------------------------------------
+# pass A:  z = X^T u
+# ---------------------------------------------------------------------------
+
+def _xt_u_kernel(x_ref, u_ref, z_ref):
+    """Grid (nj, di): z[1, bn] += u[1, bd] @ X[bd, bn]; di fastest."""
+    di = pl.program_id(1)
+
+    @pl.when(di == 0)
+    def _init():
+        z_ref[...] = jnp.zeros_like(z_ref)
+
+    x = x_ref[...]
+    u = u_ref[...]
+    z_ref[...] += jnp.dot(u, x, preferred_element_type=jnp.float32)
+
+
+def xt_u(X, u, *, block_d=512, block_n=512, interpret=False):
+    """z = X^T u.   X: (d, n), u: (d,) -> z: (n,).  Shapes pre-padded."""
+    d, n = X.shape
+    assert d % block_d == 0 and n % block_n == 0, (X.shape, block_d, block_n)
+    grid = (n // block_n, d // block_d)
+    out = pl.pallas_call(
+        _xt_u_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_d, block_n), lambda nj, di: (di, nj)),
+            pl.BlockSpec((1, block_d), lambda nj, di: (0, di)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda nj, di: (0, nj)),
+        out_shape=jax.ShapeDtypeStruct((1, n), jnp.float32),
+        interpret=interpret,
+    )(X, u.reshape(1, d))
+    return out.reshape(n).astype(X.dtype)
+
+
+# ---------------------------------------------------------------------------
+# pass B:  y = X (c * z)    (c-scale fused)
+# ---------------------------------------------------------------------------
+
+def _x_cz_kernel(x_ref, c_ref, z_ref, y_ref):
+    """Grid (di, nj): y[bd, 1] += X[bd, bn] @ (c*z)[bn, 1]; nj fastest."""
+    nj = pl.program_id(1)
+
+    @pl.when(nj == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    x = x_ref[...]
+    cz = (c_ref[...] * z_ref[...]).astype(x.dtype)       # fused scale
+    y_ref[...] += jnp.dot(x, cz.T,
+                          preferred_element_type=jnp.float32)
+
+
+def x_cz(X, c, z, *, block_d=512, block_n=512, interpret=False):
+    """y = X @ (c * z).   X: (d, n), c/z: (n,) -> y: (d,)."""
+    d, n = X.shape
+    assert d % block_d == 0 and n % block_n == 0, (X.shape, block_d, block_n)
+    grid = (d // block_d, n // block_n)
+    out = pl.pallas_call(
+        _x_cz_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_d, block_n), lambda di, nj: (di, nj)),
+            pl.BlockSpec((1, block_n), lambda di, nj: (0, nj)),
+            pl.BlockSpec((1, block_n), lambda di, nj: (0, nj)),
+        ],
+        out_specs=pl.BlockSpec((block_d, 1), lambda di, nj: (di, 0)),
+        out_shape=jax.ShapeDtypeStruct((d, 1), jnp.float32),
+        interpret=interpret,
+    )(X, c.reshape(1, n), z.reshape(1, n))
+    return out.reshape(d).astype(X.dtype)

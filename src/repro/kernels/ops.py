@@ -1,0 +1,127 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handles padding to block multiples, dtype plumbing, and backend dispatch:
+on TPU the compiled kernels run natively; everywhere else they run in
+``interpret=True`` (Python emulation — bit-faithful to the kernel body) or
+fall back to the jnp reference for speed (``REPRO_KERNEL_MODE=ref``).
+
+Set ``REPRO_KERNEL_MODE`` to one of:
+  auto      (default) native on TPU, interpret elsewhere
+  interpret force interpret mode (what the tests use)
+  ref       skip Pallas, call the jnp oracle (fast CPU path for examples)
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import glm_hvp as _hvp
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ref as _ref
+
+
+def _mode() -> str:
+    m = os.environ.get("REPRO_KERNEL_MODE", "auto")
+    if m == "auto":
+        return "native" if jax.default_backend() == "tpu" else "interpret"
+    return m
+
+
+def _pad_axis(a, axis, mult):
+    pad = (-a.shape[axis]) % mult
+    if pad == 0:
+        return a, 0
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths), pad
+
+
+# ---------------------------------------------------------------------------
+# GLM HVP
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("block_d", "block_n", "mode"))
+def _glm_hvp_impl(X, c, u, lam, *, block_d, block_n, mode):
+    d, n = X.shape
+    if mode == "ref":
+        return _ref.ref_glm_hvp(X, c, u, lam)
+    interp = mode == "interpret"
+    Xp, _ = _pad_axis(X, 0, block_d)
+    Xp, _ = _pad_axis(Xp, 1, block_n)
+    cp, _ = _pad_axis(c, 0, block_n)
+    up, _ = _pad_axis(u, 0, block_d)
+    z = _hvp.xt_u(Xp, up, block_d=block_d, block_n=block_n,
+                  interpret=interp)
+    y = _hvp.x_cz(Xp, cp, z, block_d=block_d, block_n=block_n,
+                  interpret=interp)
+    return y[:d] / n + lam * u
+
+
+def glm_hvp(X, c, u, lam, *, block_d=512, block_n=512, mode=None):
+    """H u = X diag(c) X^T u / n + lam u  via the two fused Pallas passes."""
+    mode = mode or _mode()
+    return _glm_hvp_impl(X, c, u, jnp.asarray(lam, X.dtype),
+                         block_d=block_d, block_n=block_n, mode=mode)
+
+
+def xt_u(X, u, *, block_d=512, block_n=512, mode=None):
+    """z = X^T u (pass A only — what DiSCO-F all-reduces)."""
+    mode = mode or _mode()
+    if mode == "ref":
+        return _ref.ref_xt_u(X, u)
+    d, n = X.shape
+    Xp, _ = _pad_axis(X, 0, block_d)
+    Xp, _ = _pad_axis(Xp, 1, block_n)
+    up, _ = _pad_axis(u, 0, block_d)
+    z = _hvp.xt_u(Xp, up, block_d=block_d, block_n=block_n,
+                  interpret=(mode == "interpret"))
+    return z[:n]
+
+
+def x_cz_local(X, c, z, *, block_d=512, block_n=512, mode=None):
+    """y = X @ (c * z) (pass B only — the scale is fused in the kernel).
+
+    Used by the distributed PCG: pass A's result is psum'd across shards
+    (DiSCO-F's one n-vector round), then pass B runs on the local rows."""
+    mode = mode or _mode()
+    if mode == "ref":
+        return _ref.ref_x_cz(X, c * z)
+    d, n = X.shape
+    Xp, _ = _pad_axis(X, 0, block_d)
+    Xp, _ = _pad_axis(Xp, 1, block_n)
+    cp, _ = _pad_axis(c, 0, block_n)
+    zp, _ = _pad_axis(z, 0, block_n)
+    y = _hvp.x_cz(Xp, cp, zp, block_d=block_d, block_n=block_n,
+                  interpret=(mode == "interpret"))
+    return y[:d]
+
+
+# ---------------------------------------------------------------------------
+# Flash attention
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "mode"))
+def _flash_impl(q, k, v, *, causal, window, block_q, block_k, mode):
+    if mode == "ref":
+        return _ref.ref_attention(q, k, v, causal=causal, window=window)
+    S, T = q.shape[2], k.shape[2]
+    bq, bk = min(block_q, S), min(block_k, T)
+    qp, _ = _pad_axis(q, 2, bq)
+    kp, _ = _pad_axis(k, 2, bk)
+    vp, _ = _pad_axis(v, 2, bk)
+    out = _fa.flash_attention(qp, kp, vp, causal=causal, window=window,
+                              block_q=bq, block_k=bk, kv_len=T,
+                              interpret=(mode == "interpret"))
+    return out[:, :, :S]
+
+
+def flash_attention(q, k, v, *, causal=True, window=0,
+                    block_q=512, block_k=512, mode=None):
+    """Flash attention with GQA + causal/sliding-window masking."""
+    mode = mode or _mode()
+    return _flash_impl(q, k, v, causal=causal, window=window,
+                       block_q=block_q, block_k=block_k, mode=mode)

@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each ``ref_*`` is the mathematically transparent implementation the kernels
+are tested against with ``np.testing.assert_allclose`` across shape/dtype
+sweeps (see tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ref_glm_hvp(X, c, u, lam, n_global=None):
+    """GLM Hessian-vector product  H u = X diag(c) X^T u / n + lam * u.
+
+    X : (d, n)   feature matrix (or a shard of it)
+    c : (n,)     per-sample phi'' coefficients (already masked/scaled when
+                 the Hessian is subsampled, paper §5.4)
+    u : (d,)     probe vector
+    """
+    n = X.shape[1] if n_global is None else n_global
+    z = X.T @ u                       # (n,)
+    return X @ (c * z) / n + lam * u
+
+
+def ref_xt_u(X, u):
+    """z = X^T u   (DiSCO-F's one communicated n-vector, pre-psum)."""
+    return X.T @ u
+
+
+def ref_x_cz(X, cz):
+    """y = X @ cz  (second half of the HVP chain)."""
+    return X @ cz
+
+
+def ref_attention(q, k, v, causal=True, window=0, scale=None):
+    """Masked multi-head attention oracle.
+
+    q : (B, Hq, S, Dh), k/v : (B, Hkv, T, Dh); GQA via head repetition.
+    window > 0 adds a sliding-window constraint (diff < window).
+    Softmax in f32 regardless of input dtype.
+    """
+    B, Hq, S, Dh = q.shape
+    Hkv, T = k.shape[1], k.shape[2]
+    if Hq != Hkv:
+        rep = Hq // Hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    scale = scale if scale is not None else Dh ** -0.5
+    logits = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(S)[:, None]
+    k_pos = jnp.arange(T)[None, :]
+    diff = (q_pos + (T - S)) - k_pos          # aligns last q with last k
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= diff >= 0
+    if window and window > 0:
+        mask &= diff < window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jnp.exp(logits - jnp.max(logits, -1, keepdims=True))
+    probs = probs / jnp.sum(probs, -1, keepdims=True)
+    out = jnp.einsum("bhst,bhtd->bhsd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,12 @@
+"""Launchers: production mesh, multi-pod dry-run, cost probe, train/serve.
+
+NOTE: ``dryrun`` and ``costprobe`` set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` at import time and
+therefore must be the FIRST jax-touching import of their process. Import
+them only as ``python -m repro.launch.dryrun`` entry points.
+"""
+from repro.launch.mesh import (HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16,
+                               make_host_mesh, make_production_mesh)
+
+__all__ = ["make_production_mesh", "make_host_mesh", "PEAK_FLOPS_BF16",
+           "HBM_BW", "ICI_BW_PER_LINK"]

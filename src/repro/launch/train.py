@@ -1,0 +1,61 @@
+"""Training launcher:  python -m repro.launch.train --arch olmo-1b ...
+
+Runs the pjit'd training loop on whatever devices this host exposes
+(reduced smoke variant by default; ``--full`` selects the assigned config,
+realistically only lowerable on a real pod — see launch/dryrun.py for the
+no-hardware validation path).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import ARCHS, get_config, get_smoke_config
+from repro.data.tokens import TokenPipeline
+from repro.launch.mesh import make_host_mesh
+from repro.optim import AdamWConfig, GGNDiscoConfig
+from repro.train import TrainConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b",
+                    help=f"one of {', '.join(ARCHS)}")
+    ap.add_argument("--full", action="store_true",
+                    help="use the full assigned config (needs a real pod)")
+    ap.add_argument("--optimizer", default="adamw",
+                    choices=["adamw", "disco"])
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--remat", action="store_true")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch) if args.full \
+        else get_smoke_config(args.arch).replace(dtype="float32")
+    print(f"arch={args.arch} full={args.full} "
+          f"params={cfg.param_count()/1e6:.1f}M "
+          f"devices={len(jax.devices())}")
+
+    mesh = make_host_mesh()
+    pipe = TokenPipeline(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                         global_batch=args.batch, seed=args.seed)
+    tc = TrainConfig(
+        optimizer=args.optimizer, steps=args.steps,
+        log_every=max(1, args.steps // 20),
+        remat=args.remat, ckpt_path=args.ckpt,
+        adamw=AdamWConfig(lr=args.lr, warmup_steps=max(5, args.steps // 10),
+                          total_steps=args.steps),
+        disco=GGNDiscoConfig(tau=min(8, args.batch), max_pcg=8),
+        seed=args.seed)
+    res = train(cfg, tc, pipe, mesh=mesh)
+    print(f"done: loss {res.history[0]['loss']:.3f} -> "
+          f"{res.history[-1]['loss']:.3f} at {res.steps_per_sec:.2f} steps/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from repro.models.model import (init_params, forward, decode_step,
+                                init_cache, count_params_analytic)
+
+__all__ = ["init_params", "forward", "decode_step", "init_cache",
+           "count_params_analytic"]

@@ -1,0 +1,234 @@
+"""GQA attention with RoPE variants, sliding window, KV cache, and a
+memory-efficient blockwise (flash-style, online-softmax) implementation in
+pure JAX so that 32k-token prefill lowers without materializing S^2 scores.
+
+Projections are flat 2D matrices (d_model -> heads*head_dim) so tensor
+parallelism shards the contiguous output dim regardless of head count
+(Megatron layout; see sharding/specs.py).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import truncated_normal
+from repro.models.rope import apply_rope
+
+NEG_INF = -1e30
+
+
+def init_attention(cfg, key, dtype):
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    ks = jax.random.split(key, 4)
+    std = d ** -0.5
+    p = {"wq": truncated_normal(ks[0], (d, qd), std, dtype),
+         "wk": truncated_normal(ks[1], (d, kvd), std, dtype),
+         "wv": truncated_normal(ks[2], (d, kvd), std, dtype),
+         "wo": truncated_normal(ks[3], (qd, d), qd ** -0.5, dtype)}
+    if cfg.qkv_bias:
+        p.update(bq=jnp.zeros((qd,), dtype), bk=jnp.zeros((kvd,), dtype),
+                 bv=jnp.zeros((kvd,), dtype))
+    return p
+
+
+def _project_qkv(cfg, params, x, kv_src=None):
+    """Returns q (B,S,H,D), k/v (B,T,Hkv,D)."""
+    B, S, _ = x.shape
+    kv_in = x if kv_src is None else kv_src
+    T = kv_in.shape[1]
+    q = x @ params["wq"]
+    k = kv_in @ params["wk"]
+    v = kv_in @ params["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(B, S, cfg.num_heads, cfg.head_dim)
+    k = k.reshape(B, T, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(B, T, cfg.num_kv_heads, cfg.head_dim)
+    return q, k, v
+
+
+def _gqa_scores(q, k):
+    """q: (B,S,H,D), k: (B,T,Hkv,D) -> scores (B,H,S,T) with GQA groups."""
+    B, S, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, S, Hkv, G, D)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, k) / jnp.sqrt(D).astype(q.dtype)
+    return s.reshape(B, Hkv * G, S, s.shape[-1])
+
+
+def _gqa_combine(probs, v):
+    B, H, S, T = probs.shape
+    Hkv = v.shape[2]
+    G = H // Hkv
+    pg = probs.reshape(B, Hkv, G, S, T)
+    o = jnp.einsum("bkgst,btkd->bskgd", pg, v)
+    return o.reshape(B, S, H, v.shape[-1])
+
+
+def _mask(mode, q_pos, k_pos, window):
+    """(.., S, T) boolean validity mask from absolute positions."""
+    diff = q_pos[..., :, None] - k_pos[..., None, :]
+    if mode == "full":
+        return jnp.ones(diff.shape, bool)
+    if mode == "causal":
+        return diff >= 0
+    if mode == "sliding":
+        return (diff >= 0) & (diff < window)
+    raise ValueError(mode)
+
+
+def full_attention(cfg, q, k, v, mode, q_pos, k_pos):
+    """Direct S x T attention — small sequences / tests."""
+    scores = _gqa_scores(q, k).astype(jnp.float32)
+    m = _mask(mode, q_pos, k_pos, cfg.window)[:, None]  # (B,1,S,T)
+    scores = jnp.where(m, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, -1).astype(q.dtype)
+    return _gqa_combine(probs, v)
+
+
+def blockwise_attention(cfg, q, k, v, mode, q_pos, k_pos,
+                        block_q=512, block_kv=1024):
+    """Flash-style online softmax, scanning KV blocks inside Q blocks.
+
+    Peak live scores: (B, block_q, H, block_kv) instead of (B, S, H, T).
+    The per-Q-block body is rematerialized (jax.checkpoint) so the backward
+    pass recomputes block scores instead of saving them all.
+    """
+    B, S, H, D = q.shape
+    T = k.shape[1]
+    bq, bk = min(block_q, S), min(block_kv, T)
+    nq, nk = -(-S // bq), -(-T // bk)
+    # pad to block multiples
+    q = jnp.pad(q, ((0, 0), (0, nq * bq - S), (0, 0), (0, 0)))
+    qp = jnp.pad(q_pos, ((0, 0), (0, nq * bq - S)))
+    k = jnp.pad(k, ((0, 0), (0, nk * bk - T), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, nk * bk - T), (0, 0), (0, 0)))
+    kp = jnp.pad(k_pos, ((0, 0), (0, nk * bk - T)), constant_values=2**30)
+
+    kb = k.reshape(B, nk, bk, *k.shape[2:])
+    vb = v.reshape(B, nk, bk, *v.shape[2:])
+    kpb = kp.reshape(B, nk, bk)
+
+    @jax.checkpoint
+    def q_block(qi, qpi):
+        # qi: (B, bq, H, D); scan over kv blocks with running max/sum
+        acc0 = jnp.zeros((B, bq, H, D), jnp.float32)
+        m0 = jnp.full((B, H, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, bq), jnp.float32)
+
+        def body(carry, kv):
+            acc, m, l = carry
+            kj, vj, kpj = kv
+            s = _gqa_scores(qi, kj).astype(jnp.float32)        # (B,H,bq,bk)
+            valid = _mask(mode, qpi, kpj, cfg.window)[:, None]
+            s = jnp.where(valid, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, -1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, -1)
+            o = _gqa_combine(p.astype(qi.dtype), vj).astype(jnp.float32)
+            acc = acc * corr.transpose(0, 2, 1)[..., None] + o
+            return (acc, m_new, l), None
+
+        (acc, m, l), _ = jax.lax.scan(
+            body, (acc0, m0, l0),
+            (kb.transpose(1, 0, 2, 3, 4), vb.transpose(1, 0, 2, 3, 4),
+             kpb.transpose(1, 0, 2)))
+        l = jnp.maximum(l, 1e-30)
+        return (acc / l.transpose(0, 2, 1)[..., None]).astype(qi.dtype)
+
+    qb = q.reshape(B, nq, bq, H, D).transpose(1, 0, 2, 3, 4)
+    qpb = qp.reshape(B, nq, bq).transpose(1, 0, 2)
+    ob = jax.lax.map(lambda args: q_block(*args), (qb, qpb))
+    o = ob.transpose(1, 0, 2, 3, 4).reshape(B, nq * bq, H, D)
+    return o[:, :S]
+
+
+def attention_block(cfg, params, x, positions, mode=None, kv_src=None,
+                    kv_positions=None, use_rope=True, block_threshold=2048):
+    """Full attention sub-layer: project, rope, attend, output-project."""
+    mode = mode or ("sliding" if cfg.attention == "sliding" else "causal")
+    q, k, v = _project_qkv(cfg, params, x, kv_src)
+    q_pos = positions if positions.ndim == 2 else positions[..., 0]
+    k_pos = q_pos if kv_positions is None else kv_positions
+    if use_rope:
+        q = apply_rope(cfg, q, positions)
+        if kv_src is None:
+            k = apply_rope(cfg, k, positions)
+    S, T = q.shape[1], k.shape[1]
+    impl = os.environ.get("REPRO_ATTN_IMPL", "auto")
+    if impl == "flash" and kv_src is None and q_pos.shape == k_pos.shape:
+        # Pallas flash kernel (kernels/flash_attention.py): self-attention
+        # with contiguous positions only (decoder prefill / training path).
+        from repro.kernels import flash_attention as _flash
+        o = _flash(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                   v.transpose(0, 2, 1, 3),
+                   causal=(mode != "full"),
+                   window=cfg.window if mode == "sliding" else 0)
+        o = o.transpose(0, 2, 1, 3)
+    elif impl == "full" or (impl != "blockwise"
+                            and max(S, T) <= block_threshold):
+        o = full_attention(cfg, q, k, v, mode, q_pos, k_pos)
+    else:
+        o = blockwise_attention(cfg, q, k, v, mode, q_pos, k_pos)
+    B, S = x.shape[:2]
+    return o.reshape(B, S, cfg.q_dim) @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# KV-cache decode
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg, batch, max_len, dtype):
+    L = min(max_len, cfg.window) if cfg.attention == "sliding" else max_len
+    return {"k": jnp.zeros((batch, L, cfg.num_kv_heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((batch, L, cfg.num_kv_heads, cfg.head_dim), dtype),
+            "pos": jnp.full((batch, L), -1, jnp.int32)}
+
+
+def decode_attention(cfg, params, x, cache, index):
+    """One-token decode. x: (B, 1, d); index: scalar absolute position.
+
+    Sliding-window caches are rolling buffers (slot = index mod window);
+    masking is by absolute stored position, so wraparound is handled
+    uniformly and empty slots (pos = -1) are always invalid.
+    """
+    B = x.shape[0]
+    q, k, v = _project_qkv(cfg, params, x)
+    pos = jnp.full((B, 1), index, jnp.int32)
+    q = apply_rope(cfg, q, pos if cfg.rope != "mrope" else
+                   jnp.broadcast_to(pos[..., None], (B, 1, 3)))
+    k = apply_rope(cfg, k, pos if cfg.rope != "mrope" else
+                   jnp.broadcast_to(pos[..., None], (B, 1, 3)))
+
+    L = cache["k"].shape[1]
+    slot = index % L
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, 1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, 1)
+    cpos = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], pos, slot, 1)
+
+    scores = _gqa_scores(q, ck).astype(jnp.float32)     # (B,H,1,L)
+    diff = index - cpos                                  # (B, L)
+    valid = (cpos >= 0) & (diff >= 0)
+    if cfg.attention == "sliding":
+        valid &= diff < cfg.window
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, -1).astype(x.dtype)
+    o = _gqa_combine(probs, cv)
+    out = o.reshape(B, 1, cfg.q_dim) @ params["wo"]
+    return out, {"k": ck, "v": cv, "pos": cpos}
+
+
+def cross_attention_cached(cfg, params, x, cross_k, cross_v):
+    """Decode-time cross attention against precomputed encoder K/V."""
+    B = x.shape[0]
+    q = (x @ params["wq"] + (params.get("bq", 0.0) if cfg.qkv_bias else 0.0))
+    q = q.reshape(B, 1, cfg.num_heads, cfg.head_dim)
+    scores = _gqa_scores(q, cross_k).astype(jnp.float32)
+    probs = jax.nn.softmax(scores, -1).astype(x.dtype)
+    o = _gqa_combine(probs, cross_v)
+    return o.reshape(B, 1, cfg.q_dim) @ params["wo"]

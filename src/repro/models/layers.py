@@ -1,0 +1,102 @@
+"""Shared layers: norms, MLPs, embeddings. Functional, dict-pytree params.
+
+Conventions:
+  * params are nested dicts of jnp arrays;
+  * every ``init_*`` takes a PRNG key and returns the param subtree;
+  * every ``apply_*`` is pure: (cfg, params, x, ...) -> y;
+  * compute dtype follows x; norm statistics and softmax run in f32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def truncated_normal(key, shape, std, dtype):
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape,
+                                              jnp.float32)).astype(dtype)
+
+
+# -- norms -------------------------------------------------------------------
+
+def init_norm(cfg, dtype):
+    if cfg.norm == "rmsnorm":
+        return {"scale": jnp.ones((cfg.d_model,), dtype)}
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((cfg.d_model,), dtype),
+                "bias": jnp.zeros((cfg.d_model,), dtype)}
+    if cfg.norm == "nonparametric_ln":   # OLMo: LN without learnable params
+        return {}
+    raise ValueError(cfg.norm)
+
+
+def apply_norm(cfg, params, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+        return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.var(xf, -1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    if cfg.norm == "layernorm":
+        y = y * params["scale"].astype(jnp.float32) \
+            + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# -- MLPs --------------------------------------------------------------------
+
+def init_mlp(cfg, key, dtype, d_ff=None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    std_in, std_out = d ** -0.5, f ** -0.5
+    if cfg.mlp == "swiglu":
+        return {"w_gate": truncated_normal(k1, (d, f), std_in, dtype),
+                "w_up": truncated_normal(k2, (d, f), std_in, dtype),
+                "w_down": truncated_normal(k3, (f, d), std_out, dtype)}
+    if cfg.mlp == "gelu":
+        return {"w_in": truncated_normal(k1, (d, f), std_in, dtype),
+                "b_in": jnp.zeros((f,), dtype),
+                "w_out": truncated_normal(k2, (f, d), std_out, dtype),
+                "b_out": jnp.zeros((d,), dtype)}
+    raise ValueError(cfg.mlp)
+
+
+def apply_mlp(cfg, params, x):
+    if cfg.mlp == "swiglu":
+        g = jax.nn.silu(x @ params["w_gate"])
+        return (g * (x @ params["w_up"])) @ params["w_down"]
+    h = jax.nn.gelu(x @ params["w_in"] + params["b_in"])
+    return h @ params["w_out"] + params["b_out"]
+
+
+# -- embeddings --------------------------------------------------------------
+
+def init_embedding(cfg, key, dtype):
+    p = {"embedding": truncated_normal(key, (cfg.padded_vocab, cfg.d_model),
+                                       1.0, dtype)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = truncated_normal(jax.random.fold_in(key, 1),
+                                        (cfg.d_model, cfg.padded_vocab),
+                                        cfg.d_model ** -0.5, dtype)
+    return p
+
+
+def embed_tokens(cfg, params, tokens):
+    return jnp.take(params["embedding"], tokens, axis=0)
+
+
+def unembed(cfg, params, h):
+    if cfg.tie_embeddings:
+        logits = h @ params["embedding"].T
+    else:
+        logits = h @ params["unembed"]
+    return logits.astype(jnp.float32)
+
+
+def sinusoidal_positions(length, dim, dtype=jnp.float32, offset=0):
+    # offset may be a traced scalar (decode index) -> add, don't arange-from
+    pos = (jnp.arange(length, dtype=jnp.float32) + offset)[:, None]
+    i = jnp.arange(dim // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, 2 * i / dim)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1).astype(dtype)

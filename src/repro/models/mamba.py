@@ -1,0 +1,284 @@
+"""Mamba1 (S6 selective scan) and Mamba2 (SSD) blocks, TPU-adapted.
+
+Hardware adaptation (DESIGN.md §2): instead of the CUDA fused selective-scan,
+training/prefill uses a *chunked* formulation — an outer ``lax.scan`` carries
+the SSM state across chunks while the inside of each chunk is either an
+associative scan (mamba1) or the SSD matmul dual form (mamba2, MXU-friendly
+(chunk x chunk) matmuls). Peak memory is O(chunk * d_inner * d_state) instead
+of O(seq * d_inner * d_state). Decode is a single-token state update.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import truncated_normal
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+def _causal_conv(x, weight, bias):
+    """Depthwise causal conv. x: (B, L, C), weight: (C, W)."""
+    W = weight.shape[1]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    # windows: (B, L, W, C)
+    idx = jnp.arange(x.shape[1])[:, None] + jnp.arange(W)[None, :]
+    win = xp[:, idx]                                # (B, L, W, C)
+    return jnp.einsum("blwc,cw->blc", win, weight) + bias
+
+
+def _conv_step(state, xt, weight, bias):
+    """state: (B, W-1, C) previous inputs; xt: (B, C). Returns (y, new_state)."""
+    W = weight.shape[1]
+    full = jnp.concatenate([state, xt[:, None]], 1)       # (B, W, C)
+    y = jnp.einsum("bwc,cw->bc", full, weight) + bias
+    return y, full[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# Mamba1
+# ---------------------------------------------------------------------------
+
+def init_mamba1(cfg, key, dtype):
+    d, di, N, W = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    dt_rank = max(1, -(-d // 16))
+    ks = jax.random.split(key, 6)
+    A = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32), (di, 1))
+    return {
+        "in_proj": truncated_normal(ks[0], (d, 2 * di), d ** -0.5, dtype),
+        "conv_w": truncated_normal(ks[1], (di, W), W ** -0.5, dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": truncated_normal(ks[2], (di, dt_rank + 2 * N),
+                                   di ** -0.5, dtype),
+        "dt_proj": truncated_normal(ks[3], (dt_rank, di),
+                                    dt_rank ** -0.5, dtype),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((di,), 0.01))).astype(dtype),
+        "A_log": jnp.log(A),                       # f32 (B,H stability)
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": truncated_normal(ks[4], (di, d), di ** -0.5, dtype),
+    }
+
+
+def _mamba1_inputs(cfg, params, x):
+    """Common projection path. Returns (u, z, dt, Bc, Cc)."""
+    d, di, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    dt_rank = max(1, -(-d // 16))
+    xz = x @ params["in_proj"]
+    u, z = jnp.split(xz, 2, axis=-1)               # (B, L, di) each
+    u = jax.nn.silu(_causal_conv(u, params["conv_w"], params["conv_b"]))
+    proj = u @ params["x_proj"]                    # (B, L, dt_rank + 2N)
+    dt_in = proj[..., :dt_rank]
+    Bc = proj[..., dt_rank:dt_rank + N].astype(jnp.float32)
+    Cc = proj[..., dt_rank + N:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_in @ params["dt_proj"]
+                         + params["dt_bias"]).astype(jnp.float32)
+    return u, z, dt, Bc, Cc
+
+
+def mamba1_block(cfg, params, x, chunk=None):
+    """x: (B, L, d) -> (B, L, d) via chunked selective scan."""
+    chunk = chunk or cfg.ssm_chunk
+    B, L, d = x.shape
+    di, N = cfg.d_inner, cfg.ssm_state
+    u, z, dt, Bc, Cc = _mamba1_inputs(cfg, params, x)
+    A = -jnp.exp(params["A_log"])                  # (di, N), negative
+
+    pad = (-L) % chunk
+    if pad:
+        u_, dt_, Bc_, Cc_ = (jnp.pad(t, ((0, 0), (0, pad), (0, 0)))
+                             for t in (u, dt, Bc, Cc))
+    else:
+        u_, dt_, Bc_, Cc_ = u, dt, Bc, Cc
+    nc = (L + pad) // chunk
+
+    def reshape_c(t):
+        return t.reshape(B, nc, chunk, t.shape[-1]).transpose(1, 0, 2, 3)
+
+    uc, dtc, Bcc, Ccc = map(reshape_c, (u_, dt_, Bc_, Cc_))
+
+    @jax.checkpoint
+    def chunk_fn(state, inputs):
+        ui, dti, Bi, Ci = inputs                   # (B, chunk, ...)
+        # per-step decay and input: (B, chunk, di, N)
+        da = jnp.exp(dti[..., None] * A)           # a_t: (B, c, di, N)
+        # db = (dt * u) outer B : (B, c, di, N)
+        db = (dti * ui.astype(jnp.float32))[..., None] * Bi[:, :, None, :]
+        # associative scan within chunk
+        def op(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, ar * bl + br
+        a_cum, b_cum = jax.lax.associative_scan(op, (da, db), axis=1)
+        h = a_cum * state[:, None] + b_cum         # (B, chunk, di, N)
+        y = jnp.einsum("blin,bln->bli", h, Ci)
+        new_state = h[:, -1]
+        return new_state, y
+
+    state0 = jnp.zeros((B, di, N), jnp.float32)
+    _, yc = jax.lax.scan(chunk_fn, state0, (uc, dtc, Bcc, Ccc))
+    y = yc.transpose(1, 0, 2, 3).reshape(B, L + pad, di)[:, :L]
+    y = y + u.astype(jnp.float32) * params["D"]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return y @ params["out_proj"]
+
+
+def init_mamba1_cache(cfg, batch, dtype):
+    return {"conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+            "ssm": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32)}
+
+
+def mamba1_step(cfg, params, x, cache):
+    """x: (B, 1, d) single-token decode."""
+    d, di, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    dt_rank = max(1, -(-d // 16))
+    xz = x[:, 0] @ params["in_proj"]
+    u, z = jnp.split(xz, 2, axis=-1)               # (B, di)
+    u, conv_state = _conv_step(cache["conv"], u, params["conv_w"],
+                               params["conv_b"])
+    u = jax.nn.silu(u)
+    proj = u @ params["x_proj"]
+    dt_in = proj[..., :dt_rank]
+    Bc = proj[..., dt_rank:dt_rank + N].astype(jnp.float32)
+    Cc = proj[..., dt_rank + N:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_in @ params["dt_proj"]
+                         + params["dt_bias"]).astype(jnp.float32)
+    A = -jnp.exp(params["A_log"])
+    da = jnp.exp(dt[..., None] * A)                        # (B, di, N)
+    db = (dt * u.astype(jnp.float32))[..., None] * Bc[:, None, :]
+    h = da * cache["ssm"] + db
+    y = jnp.einsum("bin,bn->bi", h, Cc) + u.astype(jnp.float32) * params["D"]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return (y @ params["out_proj"])[:, None], {"conv": conv_state, "ssm": h}
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD)
+# ---------------------------------------------------------------------------
+
+def init_mamba2(cfg, key, dtype):
+    d, di, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    H, P, W = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_conv
+    ks = jax.random.split(key, 4)
+    conv_dim = di + 2 * N                          # x, B, C all convolved
+    return {
+        "in_proj": truncated_normal(ks[0], (d, 2 * di + 2 * N + H),
+                                    d ** -0.5, dtype),
+        "conv_w": truncated_normal(ks[1], (conv_dim, W), W ** -0.5, dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((H,), 0.01))),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)),  # (H,) f32
+        "D": jnp.ones((H,), jnp.float32),
+        "norm_scale": jnp.ones((di,), dtype),      # gated RMSNorm
+        "out_proj": truncated_normal(ks[2], (di, d), di ** -0.5, dtype),
+    }
+
+
+def _mamba2_inputs(cfg, params, x):
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    zxbcdt = x @ params["in_proj"]
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * N]
+    dt_in = zxbcdt[..., -H:]
+    xbc = jax.nn.silu(_causal_conv(xbc, params["conv_w"], params["conv_b"]))
+    u = xbc[..., :di]
+    Bc = xbc[..., di:di + N].astype(jnp.float32)
+    Cc = xbc[..., di + N:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_in.astype(jnp.float32) + params["dt_bias"])
+    return u, z, dt, Bc, Cc
+
+
+def _gated_rmsnorm(y, z, scale, eps=1e-5):
+    y = y * jax.nn.silu(z.astype(y.dtype))
+    v = y.astype(jnp.float32)
+    v = v * jax.lax.rsqrt(jnp.mean(v * v, -1, keepdims=True) + eps)
+    return (v * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def mamba2_block(cfg, params, x, chunk=None):
+    """SSD dual form: intra-chunk (chunk x chunk) matmuls + inter-chunk scan."""
+    chunk = chunk or cfg.ssm_chunk
+    B, L, d = x.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    u, z, dt, Bc, Cc = _mamba2_inputs(cfg, params, x)
+    A = -jnp.exp(params["A_log"])                  # (H,)
+
+    pad = (-L) % chunk
+    if pad:
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bc = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0)))
+        Cc = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+    Lp = L + pad
+    nc = Lp // chunk
+
+    uh = u.reshape(B, nc, chunk, H, P).transpose(1, 0, 2, 3, 4)
+    dtc = dt.reshape(B, nc, chunk, H).transpose(1, 0, 2, 3)
+    Bcc = Bc.reshape(B, nc, chunk, N).transpose(1, 0, 2, 3)
+    Ccc = Cc.reshape(B, nc, chunk, N).transpose(1, 0, 2, 3)
+
+    @jax.checkpoint
+    def chunk_fn(state, inputs):
+        ui, dti, Bi, Ci = inputs
+        # ui: (B, c, H, P); dti: (B, c, H); Bi/Ci: (B, c, N)
+        dA = dti * A                               # (B, c, H) negative
+        cum = jnp.cumsum(dA, axis=1)               # (B, c, H)
+        # intra-chunk: Lmat[i,j] = exp(cum_i - cum_j), i >= j
+        diff = cum[:, :, None, :] - cum[:, None, :, :]       # (B, c, c, H)
+        ii = jnp.arange(dti.shape[1])
+        causal = (ii[:, None] >= ii[None, :])[None, :, :, None]
+        Lmat = jnp.where(causal, jnp.exp(diff), 0.0)
+        CB = jnp.einsum("bin,bjn->bij", Ci, Bi)              # (B, c, c)
+        M = CB[..., None] * Lmat                             # (B, c, c, H)
+        xdt = ui.astype(jnp.float32) * dti[..., None]        # (B, c, H, P)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", M, xdt)
+        # inter-chunk: contribution of carried state
+        decay_in = jnp.exp(cum)                              # (B, c, H)
+        y_inter = jnp.einsum("bin,bhpn,bih->bihp", Ci, state, decay_in)
+        # state update
+        decay_out = jnp.exp(cum[:, -1:, :] - cum)            # (B, c, H)
+        dBx = jnp.einsum("bihp,bin,bih->bhpn", xdt, Bi, decay_out)
+        chunk_decay = jnp.exp(cum[:, -1])[:, :, None, None]  # (B, H, 1, 1)
+        state = chunk_decay * state + dBx
+        return state, y_intra + y_inter
+
+    state0 = jnp.zeros((B, H, P, N), jnp.float32)
+    state, yc = jax.lax.scan(chunk_fn, state0, (uh, dtc, Bcc, Ccc))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(B, Lp, H, P)[:, :L]
+    y = y + u.reshape(B, Lp, H, P)[:, :L].astype(jnp.float32) \
+        * params["D"][:, None]
+    y = y.reshape(B, L, cfg.d_inner).astype(x.dtype)
+    y = _gated_rmsnorm(y, z, params["norm_scale"])
+    return y @ params["out_proj"]
+
+
+def init_mamba2_cache(cfg, batch, dtype):
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+    return {"conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+            "ssm": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_headdim,
+                              cfg.ssm_state), jnp.float32)}
+
+
+def mamba2_step(cfg, params, x, cache):
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    zxbcdt = x[:, 0] @ params["in_proj"]
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * N]
+    dt_in = zxbcdt[..., -H:]
+    xbc, conv_state = _conv_step(cache["conv"], xbc, params["conv_w"],
+                                 params["conv_b"])
+    xbc = jax.nn.silu(xbc)
+    u = xbc[..., :di].reshape(-1, H, P)
+    Bc = xbc[..., di:di + N].astype(jnp.float32)
+    Cc = xbc[..., di + N:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_in.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    da = jnp.exp(dt * A)                                     # (B, H)
+    dBx = jnp.einsum("bhp,bn,bh->bhpn", u.astype(jnp.float32), Bc, dt)
+    h = da[..., None, None] * cache["ssm"] + dBx
+    y = jnp.einsum("bhpn,bn->bhp", h, Cc) \
+        + u.astype(jnp.float32) * params["D"][:, None]
+    y = y.reshape(-1, di).astype(x.dtype)
+    y = _gated_rmsnorm(y, z, params["norm_scale"])
+    return (y @ params["out_proj"])[:, None], {"conv": conv_state, "ssm": h}

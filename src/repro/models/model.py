@@ -1,0 +1,437 @@
+"""Architecture assembler: init / forward / decode for every assigned family.
+
+Families (cfg.arch_type):
+  dense | vlm       decoder-only transformer (GQA, RoPE variant, MLP)
+  moe               decoder-only with MoE FFN every layer
+  ssm               stack of Mamba1 blocks (attention-free)
+  hybrid            Mamba2 backbone + shared attention blocks (Zamba2-style)
+  audio             encoder-decoder (Whisper-style), frontend stubbed
+
+Layers are *stacked* pytrees scanned with ``lax.scan`` so the lowered HLO is
+O(1) in depth — essential for compiling 80-layer x 32k-token dry-runs.
+
+Frontend stubs (per assignment): ``batch['frames']`` carries precomputed
+audio-frame embeddings (B, enc_len, d_model); ``batch['extra_embeddings']``
+carries projected patch embeddings added to token embeddings (VLM path).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import mamba as mb
+from repro.models.attention import (attention_block, decode_attention,
+                                    cross_attention_cached, init_attention,
+                                    init_kv_cache)
+from repro.models.layers import (apply_mlp, apply_norm, embed_tokens,
+                                 init_embedding, init_mlp, init_norm,
+                                 sinusoidal_positions, unembed)
+from repro.models.moe import init_moe, moe_block, moe_block_decode
+from repro.models.rope import default_positions
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_layer(cfg, key, dtype, kind):
+    """One block's params. kind: dense | moe | mamba1 | mamba2 | encoder | decoder"""
+    ks = jax.random.split(key, 8)
+    if kind == "mamba1":
+        return {"norm1": init_norm(cfg, dtype),
+                "mamba": mb.init_mamba1(cfg, ks[0], dtype)}
+    if kind == "mamba2":
+        return {"norm1": init_norm(cfg, dtype),
+                "mamba": mb.init_mamba2(cfg, ks[0], dtype)}
+    p = {"norm1": init_norm(cfg, dtype),
+         "attn": init_attention(cfg, ks[0], dtype),
+         "norm2": init_norm(cfg, dtype)}
+    if kind == "moe":
+        p["moe"] = init_moe(cfg, ks[1], dtype)
+    else:
+        p["mlp"] = init_mlp(cfg, ks[1], dtype)
+    if kind == "decoder":  # enc-dec decoder block: + cross attention
+        p["norm_cross"] = init_norm(cfg, dtype)
+        p["cross"] = init_attention(cfg, ks[2], dtype)
+    return p
+
+
+def _stack_init(cfg, key, dtype, kind, n):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: _init_layer(cfg, k, dtype, kind))(keys)
+
+
+def init_params(cfg, key, dtype=None):
+    dtype = dtype or cfg.jnp_dtype
+    k_emb, k_layers, k_shared, k_enc, k_out = jax.random.split(key, 5)
+    params = {"embed": init_embedding(cfg, k_emb, dtype),
+              "final_norm": init_norm(cfg, dtype)}
+
+    at = cfg.arch_type
+    if at in ("dense", "vlm"):
+        params["layers"] = _stack_init(cfg, k_layers, dtype, "dense",
+                                       cfg.num_layers)
+    elif at == "moe":
+        assert cfg.moe_layer_period == 1, "scan requires homogeneous layers"
+        params["layers"] = _stack_init(cfg, k_layers, dtype, "moe",
+                                       cfg.num_layers)
+    elif at == "ssm":
+        params["layers"] = _stack_init(cfg, k_layers, dtype, "mamba1",
+                                       cfg.num_layers)
+    elif at == "hybrid":
+        params["layers"] = _stack_init(cfg, k_layers, dtype, "mamba2",
+                                       cfg.num_layers)
+        n_inv = cfg.num_layers // cfg.shared_attn_period
+        params["shared"] = _stack_init(cfg, k_shared, dtype, "dense",
+                                       cfg.n_shared_blocks)
+        # per-invocation down-projection of concat(h, emb0): (2d -> d)
+        from repro.models.layers import truncated_normal
+        params["shared_proj"] = truncated_normal(
+            k_out, (n_inv, 2 * cfg.d_model, cfg.d_model),
+            (2 * cfg.d_model) ** -0.5, dtype)
+    elif at == "audio":
+        params["layers"] = _stack_init(cfg, k_layers, dtype, "decoder",
+                                       cfg.num_layers)
+        params["encoder"] = {
+            "layers": _stack_init(cfg, k_enc, dtype, "dense",
+                                  cfg.encoder_layers),
+            "final_norm": init_norm(cfg, dtype)}
+    else:
+        raise ValueError(at)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _dense_layer_fwd(cfg, lp, x, positions, mode=None, kv_src=None,
+                     kv_positions=None, use_rope=True, moe=False):
+    h = x + attention_block(cfg, lp["attn"],
+                            apply_norm(cfg, lp["norm1"], x), positions,
+                            mode=mode, use_rope=use_rope)
+    if "cross" in lp:
+        h = h + attention_block(cfg, lp["cross"],
+                                apply_norm(cfg, lp["norm_cross"], h),
+                                positions, mode="full", kv_src=kv_src,
+                                kv_positions=kv_positions, use_rope=False)
+    hn = apply_norm(cfg, lp["norm2"], h)
+    if moe:
+        ff, aux = moe_block(cfg, lp["moe"], hn)
+        return h + ff, aux["aux_loss"]
+    return h + apply_mlp(cfg, lp["mlp"], hn), jnp.zeros((), jnp.float32)
+
+
+def _scan_layers(cfg, stacked, x, fwd_fn, remat=False, unroll=False):
+    from repro.models.policy import constrain
+
+    def body(h, lp):
+        out, aux = fwd_fn(lp, h)
+        # pin the carried residual stream (sequence-parallel, Megatron-SP):
+        # under lax.scan GSPMD solves the body sharding once and can settle
+        # on a replicated carry (measured 10x temp blowup on qwen2.5-32b
+        # train under the row-parallel weight layout). Sharding S on 'model'
+        # between layers also model-shards the per-layer remat checkpoints.
+        # Measured on qwen2.5-32b train_4k (temp GiB / coll GiB per device):
+        # unpinned 123/15.5, d-sharded 15.6/28.0, S-sharded 20.3/19.2 —
+        # S-sharded is the best balance on the collective-dominated shapes.
+        # Dims that do not divide the axis fall back to replicated (S=1
+        # decode, whisper's 1500-frame encoder).
+        out = constrain(out, "batch", "model", None)
+        return out, aux
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    if unroll:
+        # python loop: identical math, but every layer's ops appear in the
+        # HLO — XLA cost_analysis counts scan bodies ONCE regardless of trip
+        # count, so the launch/costprobe.py roofline probes lower unrolled
+        # 1- and 2-layer variants and extrapolate. Never use for deep nets.
+        L = jax.tree.leaves(stacked)[0].shape[0]
+        auxes = []
+        for i in range(L):
+            lp = jax.tree.map(lambda a: a[i], stacked)
+            x, aux = body(x, lp)
+            auxes.append(aux)
+        return x, jnp.sum(jnp.stack(auxes))
+    x, auxes = jax.lax.scan(body, x, stacked)
+    return x, jnp.sum(auxes)
+
+
+def forward(cfg, params, batch, remat=False, last_only=False,
+            unroll=False):
+    """Returns (logits (B, S, padded_vocab) f32, aux_loss scalar).
+
+    ``last_only=True`` (prefill serving path) unembeds only the final
+    position — (B, 1, padded_vocab) — so a 32k-token prefill never
+    materialises the full logits tensor.
+    """
+    at = cfg.arch_type
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = batch.get("positions")
+    if positions is None:
+        positions = default_positions(cfg, B, S)
+
+    x = embed_tokens(cfg, params["embed"], tokens)
+    if cfg.rope == "sinusoidal":
+        x = x + sinusoidal_positions(S, cfg.d_model, x.dtype)
+    if at == "vlm" and "extra_embeddings" in batch:
+        x = x + batch["extra_embeddings"].astype(x.dtype)
+
+    aux = jnp.zeros((), jnp.float32)
+    if at in ("dense", "vlm", "moe"):
+        fwd = lambda lp, h: _dense_layer_fwd(cfg, lp, h, positions,
+                                             moe=(at == "moe"))
+        x, aux = _scan_layers(cfg, params["layers"], x, fwd, remat, unroll)
+
+    elif at == "ssm":
+        fwd = lambda lp, h: (h + mb.mamba1_block(
+            cfg, lp["mamba"], apply_norm(cfg, lp["norm1"], h)),
+            jnp.zeros((), jnp.float32))
+        x, _ = _scan_layers(cfg, params["layers"], x, fwd, remat, unroll)
+
+    elif at == "hybrid":
+        x, aux = _hybrid_forward(cfg, params, x, positions, remat, unroll)
+
+    elif at == "audio":
+        enc = _encode_audio(cfg, params, batch, remat, unroll)
+        enc_pos = jnp.broadcast_to(
+            jnp.arange(enc.shape[1], dtype=jnp.int32), enc.shape[:2])
+        fwd = lambda lp, h: _dense_layer_fwd(
+            cfg, lp, h, positions, kv_src=enc, kv_positions=enc_pos,
+            use_rope=False)
+        x, _ = _scan_layers(cfg, params["layers"], x, fwd, remat, unroll)
+    else:
+        raise ValueError(at)
+
+    x = apply_norm(cfg, params["final_norm"], x)
+    if last_only:
+        x = x[:, -1:, :]
+    return unembed(cfg, params["embed"], x), aux
+
+
+def _encode_audio(cfg, params, batch, remat, unroll=False):
+    frames = batch["frames"].astype(cfg.jnp_dtype)       # (B, enc_len, d)
+    B, T, _ = frames.shape
+    h = frames + sinusoidal_positions(T, cfg.d_model, frames.dtype)
+    pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    fwd = lambda lp, x: (_dense_layer_fwd(cfg, lp, x, pos, mode="full",
+                                          use_rope=False)[0],
+                         jnp.zeros((), jnp.float32))
+    h, _ = _scan_layers(cfg, params["encoder"]["layers"], h, fwd, remat,
+                        unroll)
+    return apply_norm(cfg, params["encoder"]["final_norm"], h)
+
+
+def _hybrid_forward(cfg, params, x, positions, remat,
+                    unroll=False):
+    """Zamba2-style: mamba2 backbone, shared attn block every k layers.
+
+    The shared block input is concat(h, x0) down-projected with a
+    per-invocation matrix (the Zamba2 LoRA-per-invocation device is
+    simplified to a full per-invocation projection; DESIGN.md §6).
+    """
+    period = cfg.shared_attn_period
+    n_groups = cfg.num_layers // period
+    x0 = x
+
+    def group_slice(tree, i, size):
+        return jax.tree.map(lambda a: jax.lax.dynamic_slice_in_dim(
+            a, i * size, size, 0), tree)
+
+    aux = jnp.zeros((), jnp.float32)
+    for g in range(n_groups):
+        shared_idx = g % cfg.n_shared_blocks
+        sp = jax.tree.map(lambda a: a[shared_idx], params["shared"])
+        inp = jnp.concatenate([x, x0], -1) @ params["shared_proj"][g]
+        x = x + _dense_layer_fwd(cfg, sp, inp, positions)[0]
+        glayers = group_slice(params["layers"], g, period)
+        fwd = lambda lp, h: (h + mb.mamba2_block(
+            cfg, lp["mamba"], apply_norm(cfg, lp["norm1"], h)),
+            jnp.zeros((), jnp.float32))
+        x, _ = _scan_layers(cfg, glayers, x, fwd, remat, unroll)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# KV / SSM cache + single-token decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch, max_len, dtype=None):
+    dtype = dtype or cfg.jnp_dtype
+    at = cfg.arch_type
+
+    def stack(fn, n):
+        return jax.tree.map(lambda *xs: jnp.stack(xs),
+                            *[fn() for _ in range(n)])
+
+    cache = {"index": jnp.zeros((), jnp.int32)}
+    if at in ("dense", "vlm", "moe"):
+        cache["layers"] = stack(lambda: init_kv_cache(cfg, batch, max_len,
+                                                      dtype), cfg.num_layers)
+    elif at == "ssm":
+        cache["layers"] = stack(lambda: mb.init_mamba1_cache(cfg, batch,
+                                                             dtype),
+                                cfg.num_layers)
+    elif at == "hybrid":
+        cache["layers"] = stack(lambda: mb.init_mamba2_cache(cfg, batch,
+                                                             dtype),
+                                cfg.num_layers)
+        n_inv = cfg.num_layers // cfg.shared_attn_period
+        cache["shared"] = stack(lambda: init_kv_cache(cfg, batch, max_len,
+                                                      dtype), n_inv)
+    elif at == "audio":
+        cache["layers"] = stack(lambda: init_kv_cache(cfg, batch, max_len,
+                                                      dtype), cfg.num_layers)
+        cache["cross_k"] = jnp.zeros((batch, cfg.encoder_len,
+                                      cfg.num_kv_heads, cfg.head_dim), dtype)
+        cache["cross_v"] = jnp.zeros_like(cache["cross_k"])
+    return cache
+
+
+def _dense_layer_step(cfg, lp, x, lcache, index, cross_kv=None):
+    h_attn, lcache = decode_attention(cfg, lp["attn"],
+                                      apply_norm(cfg, lp["norm1"], x),
+                                      lcache, index)
+    h = x + h_attn
+    if "cross" in lp and cross_kv is not None:
+        h = h + cross_attention_cached(cfg, lp["cross"],
+                                       apply_norm(cfg, lp["norm_cross"], h),
+                                       *cross_kv)
+    hn = apply_norm(cfg, lp["norm2"], h)
+    if "moe" in lp:
+        # token-choice gather (active experts only) — the capacity dispatch
+        # wastes E/k x FLOPs on a single token (EXPERIMENTS.md §Perf it.6)
+        ff, _ = moe_block_decode(cfg, lp["moe"], hn)
+        return h + ff, lcache
+    return h + apply_mlp(cfg, lp["mlp"], hn), lcache
+
+
+def _scan_or_unroll_decode(body, x, layers, lcaches, unroll):
+    """lax.scan over (layer params, layer caches) or an unrolled loop
+    (cost probes — see _scan_layers)."""
+    if unroll:
+        L = jax.tree.leaves(layers)[0].shape[0]
+        new = []
+        for i in range(L):
+            lp = jax.tree.map(lambda a: a[i], layers)
+            lc = jax.tree.map(lambda a: a[i], lcaches)
+            x, lc_new = body(x, (lp, lc))
+            new.append(lc_new)
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *new)
+        return x, stacked
+    return jax.lax.scan(body, x, (layers, lcaches))
+
+
+def decode_step(cfg, params, tokens, cache, unroll=False):
+    """tokens: (B, 1) -> logits (B, 1, padded_vocab), updated cache."""
+    at = cfg.arch_type
+    index = cache["index"]
+    x = embed_tokens(cfg, params["embed"], tokens)
+    if cfg.rope == "sinusoidal":
+        x = x + sinusoidal_positions(1, cfg.d_model, x.dtype, offset=index)
+
+    if at in ("dense", "vlm", "moe"):
+        cross_kv = None
+        def body(h, xs):
+            lp, lc = xs
+            h_new, lc_new = _dense_layer_step(cfg, lp, h, lc, index, cross_kv)
+            return h_new, lc_new
+        x, new_lcache = _scan_or_unroll_decode(
+            body, x, params["layers"], cache["layers"], unroll)
+        cache = {**cache, "layers": new_lcache}
+
+    elif at == "audio":
+        cross_kv = (cache["cross_k"], cache["cross_v"])
+        def body(h, xs):
+            lp, lc = xs
+            h_new, lc_new = _dense_layer_step(cfg, lp, h, lc, index, cross_kv)
+            return h_new, lc_new
+        x, new_lcache = _scan_or_unroll_decode(
+            body, x, params["layers"], cache["layers"], unroll)
+        cache = {**cache, "layers": new_lcache}
+
+    elif at == "ssm":
+        def body(h, xs):
+            lp, lc = xs
+            y, lc_new = mb.mamba1_step(cfg, lp["mamba"],
+                                       apply_norm(cfg, lp["norm1"], h), lc)
+            return h + y, lc_new
+        x, new_lcache = _scan_or_unroll_decode(
+            body, x, params["layers"], cache["layers"], unroll)
+        cache = {**cache, "layers": new_lcache}
+
+    elif at == "hybrid":
+        x, cache = _hybrid_decode(cfg, params, x, cache, index,
+                                  unroll=unroll)
+    else:
+        raise ValueError(at)
+
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = unembed(cfg, params["embed"], x)
+    cache = {**cache, "index": index + 1}
+    return logits, cache
+
+
+def _hybrid_decode(cfg, params, x, cache, index, unroll=False):
+    period = cfg.shared_attn_period
+    n_groups = cfg.num_layers // period
+    x0 = x
+    new_shared = []
+    new_layers = []
+    for g in range(n_groups):
+        sp = jax.tree.map(lambda a: a[g % cfg.n_shared_blocks],
+                          params["shared"])
+        scache = jax.tree.map(lambda a: a[g], cache["shared"])
+        inp = jnp.concatenate([x, x0], -1) @ params["shared_proj"][g]
+        h_attn, scache = decode_attention(cfg, sp["attn"],
+                                          apply_norm(cfg, sp["norm1"], inp),
+                                          scache, index)
+        h = inp + h_attn
+        h = h + apply_mlp(cfg, sp["mlp"], apply_norm(cfg, sp["norm2"], h))
+        x = x + h
+        new_shared.append(scache)
+
+        glayers = jax.tree.map(
+            lambda a: jax.lax.dynamic_slice_in_dim(a, g * period, period, 0),
+            params["layers"])
+        gcache = jax.tree.map(
+            lambda a: jax.lax.dynamic_slice_in_dim(a, g * period, period, 0),
+            cache["layers"])
+        def body(h, xs):
+            lp, lc = xs
+            y, lc_new = mb.mamba2_step(cfg, lp["mamba"],
+                                       apply_norm(cfg, lp["norm1"], h), lc)
+            return h + y, lc_new
+        x, gcache_new = _scan_or_unroll_decode(body, x, glayers, gcache,
+                                               unroll)
+        new_layers.append(gcache_new)
+
+    cache = {**cache,
+             "shared": jax.tree.map(lambda *xs: jnp.stack(xs), *new_shared),
+             "layers": jax.tree.map(lambda *xs: jnp.concatenate(xs, 0),
+                                    *new_layers)}
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# analytics
+# ---------------------------------------------------------------------------
+
+def count_params_analytic(cfg, active_only=False) -> int:
+    """Exact param count via eval_shape (no allocation)."""
+    shapes = jax.eval_shape(
+        lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+    total = 0
+    for path, leaf in jax.tree_util.tree_leaves_with_path(shapes):
+        n = int(np.prod(leaf.shape))
+        if active_only and cfg.moe:
+            keys = "/".join(getattr(p, "key", str(p)) for p in path)
+            if any(w in keys for w in ("w_gate", "w_up", "w_down")) \
+                    and "moe" in keys:
+                n = int(n * cfg.top_k / cfg.num_experts)
+        total += n
+    return total

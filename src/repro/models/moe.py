@@ -1,0 +1,158 @@
+"""Mixture-of-Experts FFN with top-k routing and capacity-bounded dispatch.
+
+Dispatch is index-based (argsort by expert, positions by segment rank) rather
+than the GShard one-hot einsum: the (tokens, experts, capacity) one-hot tensor
+is quadratically infeasible at 128-expert/1M-token scale, while the gathered
+(experts, capacity, d_model) buffer is exactly the payload an expert-parallel
+all-to-all moves.
+
+SHARDING (GShard group-wise locality): routing + dispatch run PER BATCH ROW
+(vmap over B). The batch dim is data-sharded, so under GSPMD every dispatch
+buffer (B, E, C_row, d) stays token-local — no device ever materialises the
+global (E, C_global, d) tensor. (A previous global-argsort formulation
+replicated a (8, 327k, d_ff) buffer on all 256 devices and all-reduced it —
+19 GiB per layer per step; the vmap formulation removes that entirely, see
+EXPERIMENTS.md §Perf.) Expert weights are tensor-sharded on the 'model' axis
+inside each expert (d_ff split), so the expert einsums reduce with one
+(B,S,d)-scale psum like a dense Megatron MLP.
+
+Returns (output, aux) where aux carries the switch-style load-balancing loss
+and the dropped-token fraction.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import truncated_normal
+from repro.models.policy import constrain
+
+
+def init_moe(cfg, key, dtype):
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    std_in, std_out = d ** -0.5, f ** -0.5
+    return {
+        "router": truncated_normal(ks[0], (d, E), std_in, jnp.float32),
+        "w_gate": truncated_normal(ks[1], (E, d, f), std_in, dtype),
+        "w_up": truncated_normal(ks[2], (E, d, f), std_in, dtype),
+        "w_down": truncated_normal(ks[3], (E, f, d), std_out, dtype),
+    }
+
+
+def _route_row(cfg, router, xrow, k, C):
+    """Route ONE batch row. xrow: (S, d) -> dispatch indices/weights.
+
+    Returns (buf_tok (E*C,), buf_w (E*C,), aux scalars). Token index S is the
+    sentinel (maps to a zero row).
+    """
+    S = xrow.shape[0]
+    E = cfg.num_experts
+    logits = xrow.astype(jnp.float32) @ router                    # (S, E)
+    probs = jax.nn.softmax(logits, -1)
+    weights, sel = jax.lax.top_k(probs, k)                        # (S, k)
+    weights = weights / jnp.maximum(
+        jnp.sum(weights, -1, keepdims=True), 1e-9)                # renorm
+
+    # load-balancing aux (Switch): E * sum_e f_e * p_e
+    me = jnp.mean(probs, 0)
+    ce = jnp.zeros((E,), jnp.float32).at[sel.reshape(-1)].add(1.0) / (S * k)
+    aux_loss = E * jnp.sum(me * ce)
+
+    A = S * k
+    e_flat = sel.reshape(A)
+    w_flat = weights.reshape(A)
+    tok_flat = jnp.repeat(jnp.arange(S, dtype=jnp.int32), k)
+
+    order = jnp.argsort(e_flat)                                   # stable
+    e_sorted = e_flat[order]
+    tok_sorted = tok_flat[order]
+    w_sorted = w_flat[order]
+    seg_start = jnp.searchsorted(e_sorted, jnp.arange(E))         # (E,)
+    pos = jnp.arange(A, dtype=jnp.int32) - seg_start[e_sorted]
+
+    keep = pos < C
+    slot = jnp.where(keep, e_sorted * C + pos, E * C)             # overflow
+    dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+
+    buf_tok = jnp.full((E * C + 1,), S, jnp.int32).at[slot].set(tok_sorted)
+    buf_w = jnp.zeros((E * C + 1,), jnp.float32).at[slot].set(w_sorted)
+    return buf_tok[:-1], buf_w[:-1], aux_loss, dropped
+
+
+def moe_block(cfg, params, x, capacity_factor=None):
+    """x: (B, S, d) -> (B, S, d), aux dict. Per-row capacity (GShard group
+    = batch row), so dispatch is local to the data shard."""
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.top_k
+    cf = capacity_factor or cfg.capacity_factor
+    C = max(1, int(-(-S * k * cf // E)))                          # per row
+
+    buf_tok, buf_w, aux_loss, dropped = jax.vmap(
+        lambda xr: _route_row(cfg, params["router"], xr, k, C))(x)
+    # buf_tok/buf_w: (B, E*C) — keep the routing tables batch-local (GSPMD
+    # otherwise replicates the whole vmapped sort region, see policy.py)
+    buf_tok = constrain(buf_tok, "batch", None)
+    buf_w = constrain(buf_w, "batch", None)
+
+    xpad = jnp.concatenate([x, jnp.zeros((B, 1, d), x.dtype)], 1)  # sentinel
+    xb = jnp.take_along_axis(
+        xpad, buf_tok[:, :, None], axis=1).reshape(B, E, C, d)
+    xb = constrain(xb, "batch", None, None, None)
+
+    # ---- expert computation (SwiGLU), f sharded on 'model' --------------
+    g = jax.nn.silu(jnp.einsum("becd,edf->becf", xb, params["w_gate"]))
+    u = jnp.einsum("becd,edf->becf", xb, params["w_up"])
+    g = constrain(g, "batch", None, None, "model")
+    u = constrain(u, "batch", None, None, "model")
+    yb = jnp.einsum("becf,efd->becd", g * u, params["w_down"])    # (B,E,C,d)
+    yb = constrain(yb, "batch", None, None, None)
+
+    # ---- combine (per row scatter-add) -----------------------------------
+    yw = yb.reshape(B, E * C, d) * buf_w[:, :, None].astype(yb.dtype)
+
+    def combine_row(y_row, tok_row):
+        return jnp.zeros((S + 1, d), y_row.dtype).at[tok_row].add(y_row)[:S]
+
+    out = jax.vmap(combine_row)(yw, buf_tok)
+    return out.astype(x.dtype), {
+        "aux_loss": jnp.mean(aux_loss), "dropped_frac": jnp.mean(dropped)}
+
+
+def moe_block_decode(cfg, params, x):
+    """Token-choice MoE for single-token decode: gather only the k active
+    experts' weights per token instead of running the full capacity
+    dispatch.
+
+    The capacity formulation runs ALL E experts at >=1 slot even for one
+    token — measured 16x useless decode FLOPs on qwen3-moe (128 experts,
+    top-8; EXPERIMENTS.md §Roofline). Here each token gathers its k expert
+    weight blocks: O(k * d * f) compute, exactly the active parameters.
+
+    x: (B, 1, d) -> (B, 1, d), aux dict.
+    """
+    B, S, d = x.shape
+    assert S == 1, "decode path: one token per sequence"
+    E, k = cfg.num_experts, cfg.top_k
+    xf = x.reshape(B, d)
+
+    logits = xf.astype(jnp.float32) @ params["router"]            # (B, E)
+    probs = jax.nn.softmax(logits, -1)
+    weights, sel = jax.lax.top_k(probs, k)                        # (B, k)
+    weights = weights / jnp.maximum(
+        jnp.sum(weights, -1, keepdims=True), 1e-9)
+
+    # gather the k experts' weights per token: (B, k, d, f) / (B, k, f, d)
+    wg = params["w_gate"][sel]
+    wu = params["w_up"][sel]
+    wd = params["w_down"][sel]
+    g = jax.nn.silu(jnp.einsum("bd,bkdf->bkf", xf, wg))
+    u = jnp.einsum("bd,bkdf->bkf", xf, wu)
+    yk = jnp.einsum("bkf,bkfd->bkd", g * u, wd)                   # (B, k, d)
+    y = jnp.einsum("bkd,bk->bd", yk, weights.astype(yk.dtype))
+
+    me = jnp.mean(probs, 0)
+    ce = jnp.zeros((E,), jnp.float32).at[sel.reshape(-1)].add(1.0) / (B * k)
+    aux_loss = E * jnp.sum(me * ce)
+    return y.reshape(B, 1, d).astype(x.dtype), {
+        "aux_loss": aux_loss, "dropped_frac": jnp.zeros(())}

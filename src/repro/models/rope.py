@@ -1,0 +1,66 @@
+"""Rotary position embeddings: standard, partial (ChatGLM 2d), M-RoPE
+(Qwen2-VL multimodal 3-section), and none.
+
+All functions take q/k of shape (..., seq, heads, head_dim) and integer
+positions. M-RoPE takes positions of shape (..., seq, 3) — (t, h, w) triplets;
+for pure-text streams the three sections coincide (t = h = w = index), which
+is exactly Qwen2-VL's behaviour on text tokens.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _rope_angles(positions, dim, theta):
+    # positions: (..., seq) -> (..., seq, dim/2)
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    return positions.astype(jnp.float32)[..., None] * inv
+
+
+def _apply_rotary(x, angles):
+    # x: (..., seq, heads, head_dim); angles: (..., seq, head_dim/2)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x1 * sin + x2 * cos], -1).astype(x.dtype)
+
+
+def apply_rope(cfg, x, positions):
+    """Dispatch on cfg.rope. x: (batch, seq, heads, head_dim)."""
+    hd = x.shape[-1]
+    if cfg.rope in ("none", "sinusoidal"):
+        return x  # sinusoidal is additive, handled at the embedding
+    if cfg.rope == "standard":
+        return _apply_rotary(x, _rope_angles(positions, hd, cfg.rope_theta))
+    if cfg.rope == "partial":
+        # ChatGLM-style 2d RoPE: rotate only a fraction of head_dim
+        rot = int(hd * cfg.rope_fraction)
+        rot -= rot % 2
+        xr, xp = x[..., :rot], x[..., rot:]
+        xr = _apply_rotary(xr, _rope_angles(positions, rot, cfg.rope_theta))
+        return jnp.concatenate([xr, xp], -1)
+    if cfg.rope == "mrope":
+        # positions: (batch, seq, 3). Qwen2-VL splits head_dim into three
+        # sections (t, h, w) with ratio 2:1:1 on the *pairs*.
+        pairs = hd // 2
+        sec = [pairs // 2, pairs // 4, pairs - pairs // 2 - pairs // 4]
+        inv = 1.0 / (cfg.rope_theta
+                     ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+        parts, off = [], 0
+        for s, axis in zip(sec, range(3)):
+            ang = positions[..., axis].astype(jnp.float32)[..., None] \
+                * inv[off:off + s]
+            parts.append(ang)
+            off += s
+        angles = jnp.concatenate(parts, -1)  # (batch, seq, hd/2)
+        return _apply_rotary(x, angles)
+    raise ValueError(cfg.rope)
+
+
+def default_positions(cfg, batch, seq_len, offset=0):
+    pos = jnp.arange(offset, offset + seq_len, dtype=jnp.int32)
+    pos = jnp.broadcast_to(pos, (batch, seq_len))
+    if cfg.rope == "mrope":
+        return jnp.broadcast_to(pos[..., None], (batch, seq_len, 3))
+    return pos

@@ -1,0 +1,14 @@
+"""Optimizer substrate: AdamW (first-order) and GGN-DiSCO (the paper's
+damped-Newton/PCG/Woodbury machinery generalized to deep nets)."""
+from repro.optim.adamw import (AdamWConfig, AdamWState, adamw_init,
+                               adamw_update, clip_by_global_norm, global_norm,
+                               schedule_lr)
+from repro.optim.ggn_disco import (GGNDiscoConfig, GGNDiscoState,
+                                   ggn_disco_init, ggn_disco_update, ggn_vp)
+
+__all__ = [
+    "AdamWConfig", "AdamWState", "adamw_init", "adamw_update",
+    "clip_by_global_norm", "global_norm", "schedule_lr",
+    "GGNDiscoConfig", "GGNDiscoState", "ggn_disco_init", "ggn_disco_update",
+    "ggn_vp",
+]

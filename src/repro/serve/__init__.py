@@ -1,0 +1,7 @@
+"""Serving substrate: jit'd serve_step + batched decode engine."""
+from repro.serve.engine import Engine, Request, Completion, make_serve_step
+
+__all__ = ["Engine", "Request", "Completion", "make_serve_step"]
+from repro.serve.scheduler import ContinuousEngine  # noqa: E402
+
+__all__ += ["ContinuousEngine"]

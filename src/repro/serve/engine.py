@@ -1,0 +1,130 @@
+"""Serving: jit'd single-token ``serve_step`` + a batched decode engine.
+
+``serve_step`` is what the decode input-shapes (decode_32k / long_500k)
+lower in the dry-run: ONE new token against a seq_len-deep KV/SSM cache.
+The engine wraps it with greedy/temperature sampling and simple batched
+request bookkeeping (static batch slots, per-slot stop state) — enough to
+serve a small model with batched requests end-to-end on CPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import decode_step, forward, init_cache, init_params
+from repro.train.sharding import cache_pspecs, param_pspecs
+
+
+def make_serve_step(model_cfg, mesh: Mesh | None = None, cache_like=None):
+    """Returns jit'd  (params, tokens (B,1), cache) -> (logits, cache)."""
+    def step(params, tokens, cache):
+        logits, cache = decode_step(model_cfg, params, tokens, cache)
+        return logits, cache
+
+    if mesh is None:
+        return jax.jit(step, donate_argnums=(2,))
+
+    pspec = param_pspecs(model_cfg, mesh)
+    shard = lambda tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+    cspec = cache_pspecs(model_cfg, cache_like, mesh)
+    rep = NamedSharding(mesh, P())
+    return jax.jit(
+        step,
+        in_shardings=(shard(pspec), rep, shard(cspec)),
+        out_shardings=(rep, shard(cspec)),
+        donate_argnums=(2,))
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: list[int]
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    eos_id: int = -1               # -1 = never stop early
+
+
+@dataclasses.dataclass
+class Completion:
+    tokens: list[int]
+    steps: int
+    elapsed_s: float
+
+
+class Engine:
+    """Static-batch greedy/temperature decode engine over the model zoo."""
+
+    def __init__(self, model_cfg, params=None, batch_size: int = 4,
+                 max_len: int = 512, seed: int = 0):
+        self.cfg = model_cfg
+        self.batch_size = batch_size
+        self.max_len = max_len
+        key = jax.random.PRNGKey(seed)
+        self.params = params if params is not None \
+            else init_params(model_cfg, key)
+        self._step = jax.jit(
+            lambda p, t, c: decode_step(model_cfg, p, t, c))
+        self._prefill = jax.jit(
+            lambda p, b: forward(model_cfg, p, b)[0])
+        self.key = key
+
+    def _sample(self, logits, temperature):
+        logits = logits[:, -1, : self.cfg.vocab_size]
+        if temperature <= 0:
+            return jnp.argmax(logits, -1)
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.categorical(sub, logits / temperature, -1)
+
+    def generate(self, requests: list[Request]) -> list[Completion]:
+        """Prefill via teacher-forced forward, then batched decode."""
+        assert len(requests) <= self.batch_size
+        t0 = time.perf_counter()
+        B = self.batch_size
+        prompts = [r.prompt for r in requests]
+        prompts += [[0]] * (B - len(requests))     # pad slots
+        plen = max(len(p) for p in prompts)
+        toks = np.zeros((B, plen), np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, plen - len(p):] = p            # left-pad
+
+        # prefill: run full forward, then replay tokens through the cache so
+        # decode state matches (simple, correct; a fused prefill kernel is a
+        # perf iteration, not a correctness need on CPU).
+        cache = init_cache(self.cfg, B, self.max_len)
+        last_logits = None
+        for t in range(plen):
+            last_logits, cache = self._step(self.params, toks[:, t:t + 1],
+                                            cache)
+
+        max_new = max(r.max_new_tokens for r in requests)
+        out = [[] for _ in range(B)]
+        done = np.zeros(B, bool)
+        logits = last_logits
+        steps = 0
+        for _ in range(max_new):
+            temps = requests[0].temperature if requests else 0.0
+            nxt = np.asarray(self._sample(logits, temps))
+            for i, r in enumerate(requests):
+                if not done[i] and len(out[i]) < r.max_new_tokens:
+                    out[i].append(int(nxt[i]))
+                    if nxt[i] == r.eos_id:
+                        done[i] = True
+                else:
+                    done[i] = True
+            steps += 1
+            if done[: len(requests)].all():
+                break
+            logits, cache = self._step(self.params,
+                                       nxt.reshape(B, 1).astype(np.int32),
+                                       cache)
+        dt = time.perf_counter() - t0
+        return [Completion(tokens=out[i], steps=steps, elapsed_s=dt)
+                for i in range(len(requests))]

@@ -1,0 +1,143 @@
+"""Continuous batching: slot-based scheduler over the cached decode step.
+
+The static-batch ``Engine`` decodes one request batch to completion; real
+serving interleaves arrivals. ``ContinuousEngine`` keeps B cache slots and,
+at every decode tick:
+
+  1. fills free slots from the waiting queue (prefilling the new request's
+     prompt into ITS slot only, via masked single-token steps — other slots
+     keep decoding; this is the "chunked prefill as decode ticks" variant,
+     one token per tick, which keeps every tick the same jit'd shape);
+  2. decodes one token for every active slot;
+  3. retires slots that hit max_new_tokens or eos, immediately reusable.
+
+All slots share one (B, …) cache pytree, so the whole loop runs a single
+compiled ``decode_step`` regardless of request mix — the property that
+makes continuous batching deployable on TPU (no reshape/recompile per
+arrival).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode_step, init_cache, init_params
+from repro.serve.engine import Completion, Request
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Optional[Request] = None
+    req_id: int = -1
+    prompt_left: list = dataclasses.field(default_factory=list)
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = True
+
+    @property
+    def active(self):
+        return self.req is not None and not self.done
+
+
+class ContinuousEngine:
+    """Slot-based continuous batching over a shared KV/SSM cache."""
+
+    def __init__(self, model_cfg, params=None, batch_size: int = 4,
+                 max_len: int = 256, seed: int = 0):
+        self.cfg = model_cfg
+        self.B = batch_size
+        self.max_len = max_len
+        key = jax.random.PRNGKey(seed)
+        self.params = params if params is not None \
+            else init_params(model_cfg, key)
+        self._step = jax.jit(
+            lambda p, t, c: decode_step(model_cfg, p, t, c))
+        self.cache = init_cache(model_cfg, batch_size, max_len)
+        self.slots = [_Slot() for _ in range(batch_size)]
+        self.waiting: list[tuple[int, Request]] = []
+        self.finished: dict[int, Completion] = {}
+        self._next_id = 0
+        self._last_logits = None
+        self.ticks = 0
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        self.waiting.append((rid, req))
+        return rid
+
+    def _admit(self):
+        for slot in self.slots:
+            if slot.active or not self.waiting:
+                continue
+            rid, req = self.waiting.pop(0)
+            slot.req = req
+            slot.req_id = rid
+            slot.prompt_left = list(req.prompt)
+            slot.out = []
+            slot.done = False
+
+    def _reset_slot(self, i: int):
+        """Invalidate the previous occupant's state in slot i: KV entries
+        are masked out via pos = -1 (decode_attention treats pos < 0 as
+        invalid), SSM states are zeroed."""
+        def reset(path, leaf):
+            name = str(getattr(path[-1], "key", path[-1]))
+            if leaf.ndim >= 2 and leaf.shape[1] == self.B:
+                row = leaf[:, i]
+                if name == "pos":
+                    return leaf.at[:, i].set(-1)
+                if self.cfg.arch_type in ("ssm", "hybrid") \
+                        and name != "pos":
+                    return leaf.at[:, i].set(jnp.zeros_like(row))
+            return leaf
+        body = {k: v for k, v in self.cache.items() if k != "index"}
+        body = jax.tree_util.tree_map_with_path(reset, body)
+        self.cache = body | {"index": self.cache["index"]}
+
+    def tick(self):
+        """One global decode step across all slots."""
+        self._admit()
+        tokens = np.zeros((self.B, 1), np.int32)
+        for i, slot in enumerate(self.slots):
+            if not slot.active:
+                continue
+            if slot.prompt_left:
+                if len(slot.prompt_left) == len(slot.req.prompt):
+                    self._reset_slot(i)
+                tokens[i, 0] = slot.prompt_left.pop(0)
+            elif self._last_logits is not None:
+                nxt = int(jnp.argmax(
+                    self._last_logits[i, -1, : self.cfg.vocab_size]))
+                slot.out.append(nxt)
+                tokens[i, 0] = nxt
+        logits, self.cache = self._step(self.params, jnp.asarray(tokens),
+                                        self.cache)
+        self._last_logits = logits
+        self.ticks += 1
+
+        for slot in self.slots:
+            if not slot.active or slot.prompt_left:
+                continue
+            r = slot.req
+            if slot.out and (len(slot.out) >= r.max_new_tokens
+                             or slot.out[-1] == r.eos_id):
+                self.finished[slot.req_id] = Completion(
+                    tokens=slot.out, steps=self.ticks, elapsed_s=0.0)
+                slot.req = None
+                slot.done = True
+
+    def run_until_done(self, max_ticks: int = 10_000):
+        t0 = time.perf_counter()
+        while (self.waiting or any(s.active for s in self.slots)) \
+                and self.ticks < max_ticks:
+            self.tick()
+        dt = time.perf_counter() - t0
+        for c in self.finished.values():
+            c.elapsed_s = dt
+        return self.finished

@@ -1,0 +1,13 @@
+"""Training substrate: losses, pjit'd step, loop, checkpointing, sharding."""
+from repro.train.losses import lm_loss, lm_logits
+from repro.train.checkpoint import save_checkpoint, load_checkpoint
+from repro.train.sharding import (param_pspecs, batch_pspec, batch_pspec_for,
+                                  cache_pspecs, data_axes)
+from repro.train.trainer import TrainConfig, TrainResult, make_train_step, train
+
+__all__ = ["lm_loss", "lm_logits", "save_checkpoint", "load_checkpoint",
+           "param_pspecs", "batch_pspec", "batch_pspec_for", "cache_pspecs",
+           "data_axes", "TrainConfig", "TrainResult", "make_train_step",
+           "train"]
+from repro.train.evaluate import evaluate, make_eval_step  # noqa: E402
+__all__ += ["evaluate", "make_eval_step"]

@@ -1,0 +1,40 @@
+"""Minimal .npz checkpointing with exact pytree-structure roundtrip."""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(path: str, tree, step: int = 0, extra: dict | None = None):
+    leaves, treedef = _flatten(tree)
+    arrays = {f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)}
+    meta = {"treedef": str(treedef), "n_leaves": len(leaves), "step": step,
+            "extra": extra or {}}
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, __meta__=json.dumps(meta), **arrays)
+    return path
+
+
+def load_checkpoint(path: str, like):
+    """Restore into the structure of ``like`` (shape/dtype-checked)."""
+    if not path.endswith(".npz"):
+        path += ".npz"
+    data = np.load(path, allow_pickle=False)
+    meta = json.loads(str(data["__meta__"]))
+    like_leaves, treedef = _flatten(like)
+    n = meta["n_leaves"]
+    assert n == len(like_leaves), (n, len(like_leaves))
+    leaves = []
+    for i, ref in enumerate(like_leaves):
+        arr = data[f"leaf_{i}"]
+        assert arr.shape == tuple(ref.shape), (i, arr.shape, ref.shape)
+        leaves.append(arr.astype(ref.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves), meta["step"]

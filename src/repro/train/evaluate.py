@@ -1,0 +1,37 @@
+"""Held-out evaluation: jit'd eval_step + perplexity over a token stream."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.losses import lm_loss
+
+
+def make_eval_step(model_cfg):
+    @jax.jit
+    def eval_step(params, batch):
+        loss, metrics = lm_loss(model_cfg, params, batch)
+        return metrics["ce"], metrics["accuracy"]
+    return eval_step
+
+
+def evaluate(model_cfg, params, pipeline, steps: int = 8,
+             start_step: int = 1_000_000):
+    """Mean CE / perplexity / accuracy over ``steps`` held-out batches.
+
+    ``start_step`` offsets the deterministic stream so eval batches never
+    overlap the training prefix (pipeline.batch(i) is pure in (seed, i)).
+    """
+    step_fn = make_eval_step(model_cfg)
+    tot_ce = tot_acc = 0.0
+    for i in range(steps):
+        batch = {k: jnp.asarray(v)
+                 for k, v in pipeline.batch(start_step + i).items()}
+        ce, acc = step_fn(params, batch)
+        tot_ce += float(ce)
+        tot_acc += float(acc)
+    ce = tot_ce / steps
+    return {"ce": ce, "ppl": math.exp(min(ce, 30.0)),
+            "accuracy": tot_acc / steps}

@@ -1,0 +1,27 @@
+"""LM training losses on the model zoo forward pass."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import forward
+
+
+def lm_loss(cfg, params, batch, remat=False, aux_weight=0.01, unroll=False):
+    """Mean next-token CE + MoE aux loss. Returns (loss, metrics)."""
+    logits, aux = forward(cfg, params, batch, remat=remat, unroll=unroll)
+    logits = logits.astype(jnp.float32)
+    labels = batch["labels"]
+    V = logits.shape[-1]
+    logp = jax.nn.log_softmax(logits, -1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], -1)[..., 0]
+    ce = jnp.mean(nll)
+    loss = ce + aux_weight * aux
+    acc = jnp.mean(jnp.argmax(logits, -1) == labels)
+    return loss, {"ce": ce, "aux": aux, "accuracy": acc}
+
+
+def lm_logits(cfg, params, batch, remat=False, unroll=False):
+    """Logits-only head for GGN products."""
+    logits, _ = forward(cfg, params, batch, remat=remat, unroll=unroll)
+    return logits

@@ -1,0 +1,211 @@
+"""Sharding rules: params / optimizer state / batch / caches -> PartitionSpec.
+
+Scheme (MaxText-style hybrid): every large weight matrix is 2-D sharded —
+penultimate dimension on the ``data`` axis (FSDP), last dimension on the
+``model`` axis (tensor parallel). Vectors / norms / biases are replicated.
+The batch shards on (``pod``, ``data``); parameters are replicated across
+``pod`` (classic multi-pod data parallelism, gradients all-reduce over ICI/DCI
+on the pod axis).
+
+This is exactly the deep-net image of the paper's DiSCO-F insight: the PCG /
+optimizer state inherits the *parameter* sharding (feature partitioning), so
+every device owns an R^{d_j} slice of every optimizer vector and inner
+products cost one scalar all-reduce instead of a d-vector gather
+(DESIGN.md §4).
+
+Divisibility is checked per-leaf: a mesh axis that does not divide the
+dimension is dropped from the spec (e.g. 8 Mixtral experts on a 16-wide
+axis -> expert dim replicated, its (d, f) block still 2-D sharded).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+# leaves that are deliberately replicated even though they are 2-D
+_SMALL_2D = {"router", "conv_w", "dt_proj", "x_proj", "A_log"}
+# out-projections (contract over the model-sharded hidden dim): Megatron
+# row-parallel — penultimate dim on 'model' so the contraction is local and
+# the only activation collective is one (B,S,d) partial-sum all-reduce.
+# The generic rule (penult->data, last->model) would force a (B,S,ff)
+# reshard every layer (measured 2.15 GiB f32 gathers per layer, olmo probe).
+_ROW_PARALLEL = {"wo", "w_down", "out_proj", "w_out"}
+# leaves with a leading stacked-layer dimension (everything under these keys)
+_STACKED_KEYS = {"layers", "shared", "encoder"}
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 0
+
+
+def data_axes(mesh: Mesh):
+    """Batch axes, outermost first: ('pod', 'data') when both exist."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _fits(dim: int, size: int) -> bool:
+    return size > 0 and dim % size == 0
+
+
+def _leaf_spec(path_keys: list[str], shape: tuple[int, ...],
+               mesh: Mesh, for_optimizer: bool = False) -> P:
+    name = path_keys[-1]
+    stacked = any(k in _STACKED_KEYS for k in path_keys[:-1])
+    nd = len(shape)
+    dsize = _axis_size(mesh, "data")
+    msize = _axis_size(mesh, "model")
+    core_rank_full = nd - 1 if stacked else nd
+    is_expert = core_rank_full == 3          # (E, d, f)-shaped MoE weights
+
+    # vocab tables: shard the vocab dim on 'model' so unembed produces
+    # V-sharded logits with no resharding (CE reduces over V with one psum).
+    if name == "embedding":
+        return P("model", None) if _fits(shape[0], msize) else P(None, None)
+    if name == "unembed":
+        return P(None, "model") if _fits(shape[1], msize) else P(None, None)
+
+    # rank-0/1 (scalars, norms, biases, gates) and flagged small mats
+    core_rank = nd - 1 if stacked else nd
+    if core_rank <= 1 or name in _SMALL_2D:
+        return P(*([None] * nd))
+
+    spec = [None] * nd
+    if name in _ROW_PARALLEL:
+        # row-parallel: contraction dim (penult) on model, output on data
+        if _fits(shape[-2], msize):
+            spec[-2] = "model"
+        if _fits(shape[-1], dsize):
+            spec[-1] = "data"
+    else:
+        # column-parallel + FSDP: last dim -> model, penultimate -> data
+        if _fits(shape[-1], msize):
+            spec[-1] = "model"
+        if nd >= 2 and _fits(shape[-2], dsize):
+            spec[-2] = "data"
+    # MoE expert weights: PARAMS drop the 'data' dim (ZeRO-1 — no per-layer
+    # FSDP gather of multi-GiB expert tables; they stay resident, model-
+    # sharded inside each expert). OPTIMIZER moments keep the full 2-D shard
+    # (f32 moments of a 47B MoE replicated over data would OOM); AdamW is
+    # elementwise so the moment sharding need not match the weight sharding —
+    # the once-per-step reshard is the ZeRO-1 gather.
+    if is_expert and not for_optimizer:
+        spec = [s if s == "model" else None for s in spec]
+    return P(*spec)
+
+
+def param_pspecs(model_cfg, mesh: Mesh, for_optimizer: bool = False):
+    """PartitionSpec pytree matching init_params(model_cfg, key).
+
+    ``for_optimizer=True`` returns the (denser) sharding for AdamW moments —
+    identical except MoE expert tables keep their 'data' dim (ZeRO-1)."""
+    from repro.models import init_params
+    shapes = jax.eval_shape(lambda k: init_params(model_cfg, k),
+                            jax.random.PRNGKey(0))
+
+    def spec_of(path, leaf):
+        keys = [getattr(p, "key", getattr(p, "idx", str(p)))
+                for p in path]
+        keys = [str(k) for k in keys]
+        return _leaf_spec(keys, leaf.shape, mesh, for_optimizer)
+
+    return jax.tree_util.tree_map_with_path(spec_of, shapes)
+
+
+def batch_pspec(mesh: Mesh):
+    """Batch dict spec builder: leading dim on ('pod','data')."""
+    axes = data_axes(mesh)
+    b = axes if len(axes) > 1 else (axes[0] if axes else None)
+
+    class _BatchSpec(dict):
+        pass
+
+    def make(batch_like):
+        return jax.tree.map(
+            lambda leaf: P(*((b,) + (None,) * (len(leaf.shape) - 1))),
+            batch_like)
+
+    # returned object is used via jax.tree.map against a concrete batch;
+    # trainer calls it lazily. For static use, expose common entries:
+    return {
+        "tokens": P(b, None),
+        "labels": P(b, None),
+        "frames": P(b, None, None),
+        "extra_embeddings": P(b, None, None),
+        "positions": P(b, None, None),
+    }
+
+
+def batch_pspec_for(batch_like, mesh: Mesh):
+    """Spec pytree for an arbitrary batch pytree (leading dim = batch).
+
+    Falls back 'pod'+'data' -> 'data' -> replicated by divisibility (e.g.
+    long_500k's global_batch=1 cannot shard)."""
+    axes = data_axes(mesh)
+    combined = 1
+    for a in axes:
+        combined *= _axis_size(mesh, a)
+
+    def spec(leaf):
+        if not leaf.shape:
+            return P()
+        dim = leaf.shape[0]
+        if len(axes) > 1 and _fits(dim, combined):
+            b = axes
+        elif _fits(dim, _axis_size(mesh, "data")):
+            b = "data"
+        else:
+            b = None
+        return P(*((b,) + (None,) * (len(leaf.shape) - 1)))
+
+    return jax.tree.map(spec, batch_like)
+
+
+def cache_pspecs(model_cfg, cache_like, mesh: Mesh):
+    """Decode-cache specs: batch dim on 'data' when divisible, else
+    replicated; kv-head / state dims follow the model axis when divisible.
+
+    Cache leaves are stacked (L, B, ...) for layer caches; scalars ('index')
+    replicated.
+    """
+    dsize = _axis_size(mesh, "data")
+    msize = _axis_size(mesh, "model")
+
+    axes = data_axes(mesh)
+    combined = 1
+    for a in axes:
+        combined *= _axis_size(mesh, a)
+
+    def batch_axis_for(dim: int):
+        if len(axes) > 1 and _fits(dim, combined):
+            return axes            # ('pod', 'data')
+        if _fits(dim, dsize):
+            return "data"
+        return None
+
+    def spec_of(path, leaf):
+        nd = len(leaf.shape)
+        if nd <= 1:
+            return P(*([None] * nd))
+        spec = [None] * nd
+        # (L, B, T, H, Dh) kv caches / (L, B, di, N) ssm states / cross (B,..)
+        keys = "/".join(str(getattr(p, "key", p)) for p in path)
+        bdim = 0 if keys.startswith("cross") else 1
+        if nd > bdim:
+            spec[bdim] = batch_axis_for(leaf.shape[bdim])
+        # kv caches (L, B, T, H, Dh): shard kv heads on 'model' when they
+        # divide; otherwise shard the cache-length dim T (sequence-sharded
+        # KV — GSPMD turns the decode softmax into partial max/sum psums).
+        # Without this fallback, GQA archs with few kv heads (chatglm kv=2,
+        # qwen kv=4/8) replicate a multi-GiB cache across the model axis.
+        if nd == 5:
+            if _fits(leaf.shape[3], msize):
+                spec[3] = "model"
+            elif _fits(leaf.shape[2], msize):
+                spec[2] = "model"
+        # ssm state: (L, B, di, N) -> shard di (dim 2) on model
+        if nd == 4 and _fits(leaf.shape[2], msize):
+            spec[2] = "model"
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(spec_of, cache_like)

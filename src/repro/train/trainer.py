@@ -1,0 +1,146 @@
+"""Training loop: pjit'd train_step over the (data, model) mesh.
+
+``make_train_step`` builds the jit'd step for either optimizer:
+  * 'adamw'  — first-order baseline substrate
+  * 'disco'  — GGN-DiSCO (the paper's technique as a deep-net optimizer)
+
+Sharding: params/optimizer state follow ``param_sharding_rules`` (model axis
+on the large matmul dims), batch is sharded on the data axis. On a 1-device
+CPU mesh everything degenerates gracefully (smoke tests / examples).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.data.tokens import TokenPipeline
+from repro.optim import (AdamWConfig, adamw_init, adamw_update,
+                         GGNDiscoConfig, ggn_disco_init, ggn_disco_update)
+from repro.models import policy as actpolicy
+from repro.train.checkpoint import load_checkpoint, save_checkpoint
+from repro.train.losses import lm_logits, lm_loss
+from repro.train.sharding import batch_pspec_for, param_pspecs
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    optimizer: str = "adamw"            # adamw | disco
+    adamw: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+    disco: GGNDiscoConfig = dataclasses.field(default_factory=GGNDiscoConfig)
+    remat: bool = False
+    steps: int = 100
+    log_every: int = 10
+    ckpt_path: str | None = None
+    ckpt_every: int = 0                 # 0 = only at the end
+    seed: int = 0
+
+
+def make_train_step(model_cfg, train_cfg: TrainConfig,
+                    mesh: Mesh | None = None):
+    """Returns (step_fn, init_fn). step_fn(params, opt_state, batch) ->
+    (params, opt_state, metrics)."""
+    remat = train_cfg.remat
+    loss_fn = lambda p, b: lm_loss(model_cfg, p, b, remat=remat)[0]
+    loss_and_metrics = lambda p, b: lm_loss(model_cfg, p, b, remat=remat)
+    logits_fn = lambda p, b: lm_logits(model_cfg, p, b, remat=remat)
+
+    if train_cfg.optimizer == "adamw":
+        def step(params, opt_state, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_and_metrics, has_aux=True)(params, batch)
+            params, opt_state, om = adamw_update(
+                train_cfg.adamw, grads, opt_state, params)
+            return params, opt_state, {**metrics, **om, "loss": loss}
+        init = adamw_init
+    elif train_cfg.optimizer == "disco":
+        def step(params, opt_state, batch):
+            params, opt_state, m = ggn_disco_update(
+                train_cfg.disco, loss_fn, logits_fn, params, opt_state, batch)
+            return params, opt_state, m
+        init = ggn_disco_init
+    else:
+        raise ValueError(train_cfg.optimizer)
+
+    if mesh is None:
+        return jax.jit(step, donate_argnums=(0, 1)), init
+    actpolicy.set_mesh(mesh)   # activation constraints (models/policy.py)
+
+    pspec = param_pspecs(model_cfg, mesh)
+    rep = NamedSharding(mesh, P())
+
+    def shard_of(tree_specs):
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    step_fn = jax.jit(
+        step,
+        # batch sharding comes from the arrays themselves (train() does the
+        # device_put with batch_pspec_for) — batches vary by arch family
+        in_shardings=(shard_of(pspec), rep, None),
+        out_shardings=(shard_of(pspec), rep, rep),
+        donate_argnums=(0, 1))
+    return step_fn, init
+
+
+@dataclasses.dataclass
+class TrainResult:
+    params: Any
+    history: list[dict]
+    steps_per_sec: float
+
+
+def train(model_cfg, train_cfg: TrainConfig, pipeline: TokenPipeline,
+          params=None, mesh: Mesh | None = None,
+          log=print) -> TrainResult:
+    step_fn, init_fn = make_train_step(model_cfg, train_cfg, mesh)
+    key = jax.random.PRNGKey(train_cfg.seed)
+    if params is None:
+        from repro.models import init_params
+        params = init_params(model_cfg, key)
+    opt_state = init_fn(params)
+
+    start_step = 0
+    if train_cfg.ckpt_path:
+        import os
+        if os.path.exists(train_cfg.ckpt_path + ".npz"):
+            (params, opt_state), start_step = load_checkpoint(
+                train_cfg.ckpt_path, (params, opt_state))
+            log(f"resumed from step {start_step}")
+
+    def put_batch(batch):
+        if mesh is None:
+            return {k: jnp.asarray(v) for k, v in batch.items()}
+        specs = batch_pspec_for(batch, mesh)
+        return {k: jax.device_put(jnp.asarray(v),
+                                  NamedSharding(mesh, specs[k]))
+                for k, v in batch.items()}
+
+    history = []
+    t0 = time.perf_counter()
+    for step in range(start_step, train_cfg.steps):
+        batch = put_batch(pipeline.batch(step))
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % train_cfg.log_every == 0 or step == train_cfg.steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = step
+            history.append(m)
+            log(f"step {step:5d}  " + "  ".join(
+                f"{k}={v:.4g}" for k, v in m.items() if k != "step"))
+        if (train_cfg.ckpt_path and train_cfg.ckpt_every
+                and step and step % train_cfg.ckpt_every == 0):
+            save_checkpoint(train_cfg.ckpt_path, (params, opt_state),
+                            step=step + 1)
+    elapsed = time.perf_counter() - t0
+    sps = (train_cfg.steps - start_step) / max(elapsed, 1e-9)
+
+    if train_cfg.ckpt_path:
+        save_checkpoint(train_cfg.ckpt_path, (params, opt_state),
+                        step=train_cfg.steps)
+    return TrainResult(params=params, history=history, steps_per_sec=sps)

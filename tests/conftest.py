@@ -1,0 +1,24 @@
+import os
+
+# kernels run in interpret mode everywhere in the test suite (CPU CI);
+# smoke tests must see the real (1-device) CPU topology, so no
+# xla_force_host_platform_device_count here — only dryrun.py sets it.
+os.environ.setdefault("REPRO_KERNEL_MODE", "interpret")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def glm_data():
+    """Small well-behaved logistic problem shared across core tests."""
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from repro.data.synthetic import make_glm_data
+    X, y, w_true = make_glm_data(d=60, n=300, seed=0)
+    return np.asarray(X), np.asarray(y), np.asarray(w_true)
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,117 @@
+"""Baseline algorithms (DANE, CoCoA+, GD, DiSCO-SAG) behave as the paper
+describes: all decrease the gradient; Newton-type uses fewer outer rounds."""
+import numpy as np
+import pytest
+
+from repro.core import DiscoConfig, disco_fit
+from repro.core.baselines.cocoa import CocoaConfig, cocoa_fit
+from repro.core.baselines.dane import DaneConfig, dane_fit
+from repro.core.baselines.gd import GDConfig, gd_fit
+
+
+def _gn(history):
+    return np.array([h["grad_norm"] for h in history])
+
+
+def test_dane_decreases_gradient(glm_data):
+    X, y, _ = glm_data
+    w, hist, ledger = dane_fit(X, y, DaneConfig(loss="logistic", lam=1e-3,
+                                                max_outer=15))
+    g = _gn(hist)
+    assert g[-1] < 0.05 * g[0]
+    assert ledger.rounds == 2 * len(hist)     # 2 reduceAlls per iteration
+
+
+def test_cocoa_decreases_gradient(glm_data):
+    X, y, _ = glm_data
+    w, hist, ledger = cocoa_fit(X, y, CocoaConfig(loss="logistic", lam=1e-3,
+                                                  max_outer=30))
+    g = _gn(hist)
+    assert g[-1] < 0.5 * g[0]
+    assert ledger.rounds == len(hist)         # 1 reduceAll per iteration
+
+
+def test_gd_decreases_gradient(glm_data):
+    X, y, _ = glm_data
+    w, hist, ledger = gd_fit(X, y, GDConfig(loss="logistic", lam=1e-3,
+                                            max_outer=60))
+    g = _gn(hist)
+    assert g[-1] < 0.5 * g[0]
+
+
+def test_disco_sag_baseline_runs(glm_data):
+    """Original DiSCO (iterative SAG inner solve, the master bottleneck)."""
+    X, y, _ = glm_data
+    res = disco_fit(X, y, DiscoConfig(loss="logistic", lam=1e-3,
+                                      partition="samples", precond="sag",
+                                      tau=64, sag_epochs=10, max_outer=10,
+                                      grad_tol=1e-7))
+    assert res.grad_norms[-1] < 1e-4
+
+
+def test_newton_type_beats_first_order_in_rounds():
+    """Paper Table 2 / Fig 3: DiSCO reaches tolerance in far fewer
+    communication rounds than CoCoA+ (first-order). The gap shows on
+    ill-conditioned, small-lambda problems — on easy ones CoCoA+ is
+    competitive (paper Fig 3, rcv1 panel)."""
+    from repro.data.synthetic import make_glm_data
+    X, y, _ = make_glm_data(d=100, n=500, cond_decay=2.0, seed=3)
+    scal = (np.arange(1, 101) ** -1.0).astype(np.float32)
+    X = (np.asarray(X).T * scal).T * 10
+    tol = 1e-4
+    res = disco_fit(X, y, DiscoConfig(loss="logistic", lam=1e-5, tau=100,
+                                      partition="features", max_outer=40,
+                                      grad_tol=tol))
+    assert res.grad_norms[-1] <= tol
+    disco_rounds = res.ledger.rounds          # ~100
+
+    w, hist, ledger = cocoa_fit(X, y, CocoaConfig(loss="logistic", lam=1e-5,
+                                                  max_outer=400))
+    g = _gn(hist)
+    # CoCoA+ (1 round/iter) never reaches tol within 400 rounds here
+    reached = (g <= tol).any()
+    cocoa_rounds = int(np.argmax(g <= tol)) + 1 if reached else 400
+    assert disco_rounds < cocoa_rounds, (disco_rounds, cocoa_rounds)
+
+
+def test_dane_vs_disco_on_illconditioned(glm_data):
+    """DANE's local-solve bias grows with heterogeneity; DiSCO's PCG does
+    not — DiSCO reaches a tighter gradient in the same outer budget."""
+    X, y, _ = glm_data
+    res = disco_fit(X, y, DiscoConfig(loss="logistic", lam=1e-4, tau=32,
+                                      max_outer=12, grad_tol=0.0))
+    w, hist, _ = dane_fit(X, y, DaneConfig(loss="logistic", lam=1e-4,
+                                           max_outer=12))
+    assert res.grad_norms[-1] < _gn(hist)[-1]
+
+
+def test_sag_serial_fraction_dominates():
+    """Paper §1.2(1): the master-only iterative preconditioner solve eats
+    the majority of per-iteration time (they observed >50%); the Amdahl
+    bench quantifies it — here we assert the core ratio directly."""
+    import time
+    import jax
+    import jax.numpy as jnp
+    from repro.core.preconditioner import WoodburyPreconditioner, sag_solve
+    rng = np.random.default_rng(0)
+    d, n, tau = 2048, 1024, 100
+    X = jnp.asarray(rng.standard_normal((d, n)), jnp.float32)
+    c = jnp.asarray(rng.random(n) + 0.1, jnp.float32)
+    r = jnp.asarray(rng.standard_normal(d), jnp.float32)
+
+    def t(f, reps=5):
+        f().block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            f().block_until_ready()
+        return (time.perf_counter() - t0) / reps
+
+    hvp = jax.jit(lambda: X @ (c * (X.T @ r)) / n)
+    P = WoodburyPreconditioner.build(X[:, :tau], c[:tau], 1e-4, 1e-2)
+    t_hvp = t(hvp)
+    t_sag = t(jax.jit(lambda: sag_solve(X[:, :tau], c[:tau], 1e-4, 1e-2,
+                                        r, epochs=5)), reps=2)
+    t_wood = t(jax.jit(lambda: P.apply_inv(r)))
+    # SAG inner solve dominates the parallelizable HVP; Woodbury does not
+    assert t_sag > t_hvp, (t_sag, t_hvp)
+    assert t_wood < t_sag / 10, (t_wood, t_sag)

@@ -1,0 +1,145 @@
+"""Pallas kernels vs jnp oracles: shape/dtype sweeps + hypothesis properties.
+
+All runs use interpret=True (conftest sets REPRO_KERNEL_MODE=interpret) —
+the kernel *body* executes on CPU exactly as it would on TPU.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import flash_attention, glm_hvp, xt_u
+from repro.kernels.ref import ref_attention, ref_glm_hvp, ref_xt_u
+
+
+# ---------------------------------------------------------------------------
+# glm_hvp
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("d,n", [(64, 64), (100, 237), (512, 512),
+                                 (700, 1100), (33, 1), (1, 129)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_glm_hvp_shape_dtype_sweep(rng, d, n, dtype):
+    X = jnp.asarray(rng.standard_normal((d, n)), dtype)
+    c = jnp.asarray(rng.random(n), dtype)
+    u = jnp.asarray(rng.standard_normal(d), dtype)
+    lam = 0.05
+    got = glm_hvp(X, c, u, lam, block_d=128, block_n=128)
+    want = ref_glm_hvp(X.astype(jnp.float32), c.astype(jnp.float32),
+                       u.astype(jnp.float32), lam)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want), atol=tol * 10, rtol=tol)
+
+
+@given(d=st.integers(1, 300), n=st.integers(1, 300), seed=st.integers(0, 99))
+@settings(max_examples=20, deadline=None)
+def test_glm_hvp_property_random_shapes(d, n, seed):
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.standard_normal((d, n)), jnp.float32)
+    c = jnp.asarray(rng.random(n), jnp.float32)
+    u = jnp.asarray(rng.standard_normal(d), jnp.float32)
+    got = glm_hvp(X, c, u, 0.1, block_d=128, block_n=128)
+    want = ref_glm_hvp(X, c, u, 0.1)
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+def test_glm_hvp_linearity(rng):
+    """Property: H(u + a w) = H u + a H w (linear operator)."""
+    d, n = 96, 200
+    X = jnp.asarray(rng.standard_normal((d, n)), jnp.float32)
+    c = jnp.asarray(rng.random(n), jnp.float32)
+    u = jnp.asarray(rng.standard_normal(d), jnp.float32)
+    w = jnp.asarray(rng.standard_normal(d), jnp.float32)
+    a = 0.7
+    lhs = glm_hvp(X, c, u + a * w, 0.0, block_d=128, block_n=128)
+    rhs = glm_hvp(X, c, u, 0.0, block_d=128, block_n=128) \
+        + a * glm_hvp(X, c, w, 0.0, block_d=128, block_n=128)
+    np.testing.assert_allclose(lhs, rhs, atol=1e-4, rtol=1e-4)
+
+
+def test_xt_u_matches_ref(rng):
+    X = jnp.asarray(rng.standard_normal((130, 257)), jnp.float32)
+    u = jnp.asarray(rng.standard_normal(130), jnp.float32)
+    np.testing.assert_allclose(xt_u(X, u, block_d=128, block_n=128),
+                               ref_xt_u(X, u), atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+CASES = [
+    # B, Hq, Hkv, S, Dh, causal, window
+    (2, 4, 2, 128, 64, True, 0),
+    (1, 8, 2, 256, 64, True, 64),
+    (2, 2, 2, 96, 32, False, 0),
+    (1, 4, 1, 200, 64, True, 0),
+    (1, 4, 4, 130, 64, False, 50),
+    (1, 16, 4, 64, 128, True, 0),
+]
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,S,Dh,causal,win", CASES)
+def test_flash_attention_sweep(rng, B, Hq, Hkv, S, Dh, causal, win):
+    q = jnp.asarray(rng.standard_normal((B, Hq, S, Dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, Hkv, S, Dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, Hkv, S, Dh)), jnp.float32)
+    got = flash_attention(q, k, v, causal=causal, window=win,
+                          block_q=64, block_k=64)
+    want = ref_attention(q, k, v, causal=causal, window=win)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16])
+def test_flash_attention_bf16(rng, dtype):
+    q = jnp.asarray(rng.standard_normal((1, 4, 128, 64)), dtype)
+    k = jnp.asarray(rng.standard_normal((1, 2, 128, 64)), dtype)
+    v = jnp.asarray(rng.standard_normal((1, 2, 128, 64)), dtype)
+    got = flash_attention(q, k, v, block_q=64, block_k=64)
+    want = ref_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=3e-2, rtol=3e-2)
+
+
+@given(S=st.integers(2, 160), Hkv=st.sampled_from([1, 2, 4]),
+       group=st.sampled_from([1, 2, 4]), seed=st.integers(0, 50))
+@settings(max_examples=15, deadline=None)
+def test_flash_attention_property(S, Hkv, group, seed):
+    rng = np.random.default_rng(seed)
+    Hq = Hkv * group
+    q = jnp.asarray(rng.standard_normal((1, Hq, S, 32)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, Hkv, S, 32)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, Hkv, S, 32)), jnp.float32)
+    got = flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    want = ref_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(got, want, atol=3e-5, rtol=3e-5)
+
+
+def test_flash_rows_are_convex_combinations(rng):
+    """Each output row is a convex combination of v rows => within range."""
+    q = jnp.asarray(rng.standard_normal((1, 2, 128, 32)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 2, 128, 32)), jnp.float32)
+    v = jnp.asarray(rng.random((1, 2, 128, 32)), jnp.float32)  # in [0,1)
+    out = flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    assert float(jnp.min(out)) >= -1e-5
+    assert float(jnp.max(out)) <= 1.0 + 1e-5
+
+
+def test_flash_impl_selectable_in_model(rng, monkeypatch):
+    """REPRO_ATTN_IMPL=flash routes the model's attention through the
+    Pallas kernel and matches the default path."""
+    import jax
+    import repro.configs as cfgs
+    from repro.models import forward, init_params
+    sc = cfgs.get_smoke_config("olmo_1b").replace(dtype="float32")
+    params = init_params(sc, jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 64),
+                                          0, sc.vocab_size)}
+    a, _ = forward(sc, params, batch)
+    monkeypatch.setenv("REPRO_ATTN_IMPL", "flash")
+    b, _ = forward(sc, params, batch)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=1e-4, rtol=1e-4)

@@ -1,0 +1,106 @@
+"""Launch layer: production mesh + one real dry-run combo in a subprocess
+(the 512-device XLA flag must be set before jax init, hence the isolation)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_make_production_mesh_requires_devices():
+    """On this 1-device host the builder must refuse, with guidance."""
+    import jax  # noqa: F401 (already initialized by other tests)
+    from repro.launch.mesh import make_production_mesh
+    if len(jax.devices()) >= 256:
+        pytest.skip("host actually has 256+ devices")
+    with pytest.raises(RuntimeError, match="512"):
+        make_production_mesh()
+
+
+def test_hardware_constants():
+    from repro.launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+    assert PEAK_FLOPS_BF16 == 197e12
+    assert HBM_BW == 819e9
+    assert ICI_BW_PER_LINK == 50e9
+
+
+@pytest.mark.slow
+def test_dryrun_single_combo_subprocess(tmp_path):
+    """olmo-1b x decode_32k lowers + compiles on the 16x16 mesh."""
+    out = tmp_path / "rec.json"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "olmo_1b",
+         "--shape", "decode_32k", "--mesh", "pod", "--json", str(out)],
+        env=env, capture_output=True, text=True, timeout=540)
+    assert r.returncode == 0, r.stdout + r.stderr
+    recs = json.loads(out.read_text())
+    assert recs[0]["status"] == "ok"
+    assert recs[0]["devices"] == 256
+    assert recs[0]["flops_per_device"] > 0
+
+
+def test_collective_stats_parser():
+    from repro.launch.dryrun import collective_stats
+    hlo = """
+  %ag = bf16[16,4096]{1,0} all-gather(bf16[1,4096]{1,0} %p), dimensions={0}
+  %ar = f32[1024]{0} all-reduce(f32[1024]{0} %x), to_apply=%add
+  %rs.1 = f32[64]{0} reduce-scatter(f32[1024]{0} %y), dimensions={0}
+  %a2a = (f32[8]{0}, f32[8]{0}) all-to-all(f32[8]{0} %a, f32[8]{0} %b)
+  %cp = u32[2]{0} collective-permute(u32[2]{0} %c), source_target_pairs={{0,1}}
+  %not_coll = f32[10]{0} add(f32[10]{0} %q, f32[10]{0} %r)
+"""
+    stats = collective_stats(hlo)
+    assert stats["all-gather"]["count"] == 1
+    assert stats["all-gather"]["bytes"] == 16 * 4096 * 2
+    assert stats["all-reduce"]["bytes"] == 1024 * 4
+    assert stats["reduce-scatter"]["bytes"] == 64 * 4
+    assert stats["all-to-all"]["bytes"] == 2 * 8 * 4
+    assert stats["collective-permute"]["bytes"] == 2 * 4
+    assert stats["total_bytes"] == (16 * 4096 * 2 + 1024 * 4 + 64 * 4
+                                    + 64 + 8)
+
+
+def test_roofline_model_flops():
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks.roofline import model_flops
+    f_train = model_flops("olmo_1b", "train_4k")
+    f_decode = model_flops("olmo_1b", "decode_32k")
+    # train: 6*N*(256*4096) tokens; decode: 2*N*128 tokens
+    assert f_train / f_decode == pytest.approx(
+        (6 * 256 * 4096) / (2 * 128), rel=1e-6)
+    # MoE uses active params only
+    from repro.configs import get_config
+    moe = get_config("mixtral_8x7b")
+    assert moe.active_param_count() < 0.4 * moe.param_count()
+
+
+@pytest.mark.slow
+def test_glm_dryrun_table4_at_hlo_level(tmp_path):
+    """The paper's Table 4, machine-checked from compiled XLA collectives:
+    DiSCO-F's PCG all-reduces n-vectors, DiSCO-S's d-vectors, at a 1 TiB
+    problem scale on 256 chips."""
+    out = tmp_path / "glm.json"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun_glm",
+         "--partition", "both", "--mesh", "pod", "--json", str(out)],
+        env=env, capture_output=True, text=True, timeout=540)
+    assert r.returncode == 0, r.stdout + r.stderr
+    recs = {x["partition"]: x for x in json.loads(out.read_text())}
+    n, d = recs["features"]["n"], recs["features"]["d"]
+    f_bytes = recs["features"]["collectives"]["all-reduce"]["bytes"]
+    s_bytes = recs["samples"]["collectives"]["all-reduce"]["bytes"]
+    # two n-vector reduces visible (outer margins + PCG body) + scalars
+    assert abs(f_bytes - 2 * n * 4) < 1e4, f_bytes
+    # two d-vector reduces (outer gradient + PCG body)
+    assert abs(s_bytes - 2 * d * 4) < 1e4, s_bytes
+    # per-PCG-iteration ratio = n/d — the Table 4 claim
+    assert f_bytes < s_bytes

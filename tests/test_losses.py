@@ -1,0 +1,59 @@
+"""Loss derivatives vs autodiff + self-concordance (paper Assumption 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.losses import LOSSES, get_loss
+
+ABS = dict(atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("name", sorted(LOSSES))
+def test_d1_d2_match_autodiff(name):
+    loss = get_loss(name)
+    a = jnp.linspace(-3, 3, 41)
+    for y in (-1.0, 1.0):
+        yv = jnp.full_like(a, y)
+        d1_auto = jax.vmap(jax.grad(lambda ai, yi: loss.value(ai, yi)))(a, yv)
+        d2_auto = jax.vmap(jax.grad(jax.grad(
+            lambda ai, yi: loss.value(ai, yi))))(a, yv)
+        np.testing.assert_allclose(loss.d1(a, yv), d1_auto, **ABS)
+        np.testing.assert_allclose(loss.d2(a, yv), d2_auto, **ABS)
+
+
+@pytest.mark.parametrize("name", sorted(LOSSES))
+def test_d2_nonnegative_convexity(name):
+    loss = get_loss(name)
+    a = jnp.linspace(-10, 10, 201)
+    for y in (-1.0, 1.0):
+        assert bool(jnp.all(loss.d2(a, jnp.full_like(a, y)) >= -1e-7))
+
+
+@given(a=st.floats(-5, 5), y=st.sampled_from([-1.0, 1.0]))
+@settings(max_examples=60, deadline=None)
+def test_logistic_self_concordance_pointwise(a, y):
+    """|phi'''| <= M * (phi'')^{3/2} with M=1 for scalar logistic margin
+    (paper Table 1; the d-dimensional statement reduces to the margin)."""
+    loss = get_loss("logistic")
+    f = lambda t: loss.value(t, y)
+    d2 = jax.grad(jax.grad(f))(a)
+    d3 = jax.grad(jax.grad(jax.grad(f)))(a)
+    # logistic margins: |d3| <= d2^{3/2} is false in general (d2<1 helps);
+    # the paper's Assumption 1 is in w-space with ||x||<=1; on the margin
+    # the sharp inequality is |d3| <= d2 * (1 - 2s)(bounded by d2).
+    assert abs(d3) <= d2 + 1e-9
+
+
+def test_self_concordance_constants_match_table1():
+    assert get_loss("quadratic").M == 0.0
+    assert get_loss("squared_hinge").M == 0.0
+    assert get_loss("logistic").M == 1.0
+
+
+def test_quadratic_d2_constant():
+    loss = get_loss("quadratic")
+    a = jnp.linspace(-4, 4, 17)
+    np.testing.assert_allclose(loss.d2(a, jnp.zeros_like(a)),
+                               2.0 * jnp.ones_like(a), **ABS)

@@ -1,0 +1,128 @@
+"""Model-layer property tests: invariances the architectures must satisfy."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.configs as cfgs
+from repro.models import forward, init_params
+from repro.models import mamba as mb
+from repro.models.rope import apply_rope
+
+
+# ---------------------------------------------------------------------------
+# Mamba: the chunked selective scan must be chunk-size invariant
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def mamba_setup():
+    cfg = cfgs.get_smoke_config("falcon_mamba_7b").replace(dtype="float32")
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    lp = jax.tree.map(lambda a: a[0], params["layers"])
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 96, cfg.d_model))
+    return cfg, lp, x
+
+
+@pytest.mark.parametrize("chunk", [8, 32, 96, 128])
+def test_mamba1_chunk_invariance(mamba_setup, chunk):
+    cfg, lp, x = mamba_setup
+    ref = mb.mamba1_block(cfg, lp["mamba"], x, chunk=96)
+    got = mb.mamba1_block(cfg, lp["mamba"], x, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=2e-4, rtol=2e-3)
+
+
+def test_mamba1_step_matches_block(mamba_setup):
+    """Sequential single-token recurrence == the parallel chunked scan."""
+    cfg, lp, x = mamba_setup
+    ref = mb.mamba1_block(cfg, lp["mamba"], x[:, :16])
+    cache = mb.init_mamba1_cache(cfg, 2, jnp.float32)
+    outs = []
+    for t in range(16):
+        y, cache = mb.mamba1_step(cfg, lp["mamba"], x[:, t:t + 1], cache)
+        outs.append(y)
+    got = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=5e-4, rtol=5e-3)
+
+
+def test_mamba_causality(mamba_setup):
+    """Perturbing position t must not change outputs before t."""
+    cfg, lp, x = mamba_setup
+    y0 = mb.mamba1_block(cfg, lp["mamba"], x)
+    x2 = x.at[:, 50].add(10.0)
+    y2 = mb.mamba1_block(cfg, lp["mamba"], x2)
+    np.testing.assert_allclose(np.asarray(y0[:, :50]),
+                               np.asarray(y2[:, :50]), atol=1e-5)
+    assert float(jnp.max(jnp.abs(y0[:, 50:] - y2[:, 50:]))) > 1e-3
+
+
+# ---------------------------------------------------------------------------
+# RoPE: rotation invariants
+# ---------------------------------------------------------------------------
+
+def test_rope_preserves_norm():
+    cfg = cfgs.get_smoke_config("olmo_1b").replace(dtype="float32")
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 16, 4, cfg.head_dim))
+    pos = jnp.broadcast_to(jnp.arange(16, dtype=jnp.int32), (1, 16))
+    qr = apply_rope(cfg, q, pos)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(q), axis=-1),
+                               np.linalg.norm(np.asarray(qr), axis=-1),
+                               rtol=1e-5)
+
+
+def test_rope_relative_property():
+    """<R(p)q, R(p')k> depends only on p - p' (the RoPE invariant)."""
+    cfg = cfgs.get_smoke_config("olmo_1b").replace(dtype="float32")
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(key, (1, 1, 1, cfg.head_dim))
+    k = jax.random.normal(jax.random.fold_in(key, 1),
+                          (1, 1, 1, cfg.head_dim))
+
+    def dot_at(pq, pk):
+        qr = apply_rope(cfg, q, jnp.full((1, 1), pq, jnp.int32))
+        kr = apply_rope(cfg, k, jnp.full((1, 1), pk, jnp.int32))
+        return float(jnp.vdot(qr, kr))
+
+    assert dot_at(5, 3) == pytest.approx(dot_at(12, 10), rel=1e-4)
+    assert dot_at(0, 0) == pytest.approx(dot_at(100, 100), rel=1e-4)
+    assert dot_at(5, 3) != pytest.approx(dot_at(5, 4), rel=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Transformer causality across families
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["olmo_1b", "mixtral_8x7b", "zamba2_2_7b"])
+def test_causal_forward(arch):
+    cfg = cfgs.get_smoke_config(arch).replace(dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 24), 0,
+                              cfg.vocab_size)
+    l0, _ = forward(cfg, params, {"tokens": toks})
+    toks2 = toks.at[0, 20].set((toks[0, 20] + 1) % cfg.vocab_size)
+    l2, _ = forward(cfg, params, {"tokens": toks2})
+    np.testing.assert_allclose(np.asarray(l0[:, :20]),
+                               np.asarray(l2[:, :20]), atol=2e-4,
+                               rtol=1e-3)
+    assert float(jnp.max(jnp.abs(l0[:, 20:] - l2[:, 20:]))) > 1e-3
+
+
+# ---------------------------------------------------------------------------
+# Batch-order equivariance (routing, caches, scans must not mix rows)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["olmo_1b", "mixtral_8x7b",
+                                  "falcon_mamba_7b"])
+def test_batch_permutation_equivariance(arch):
+    cfg = cfgs.get_smoke_config(arch).replace(dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (3, 16), 0,
+                              cfg.vocab_size)
+    out, _ = forward(cfg, params, {"tokens": toks})
+    perm = jnp.asarray([2, 0, 1])
+    out_p, _ = forward(cfg, params, {"tokens": toks[perm]})
+    np.testing.assert_allclose(np.asarray(out[perm]), np.asarray(out_p),
+                               atol=2e-4, rtol=2e-3)

@@ -1,0 +1,70 @@
+"""Continuous-batching scheduler: slot reuse, queueing, engine parity."""
+import pytest
+
+import repro.configs as cfgs
+from repro.serve import ContinuousEngine, Engine, Request
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return cfgs.get_smoke_config("olmo_1b").replace(dtype="float32")
+
+
+def test_queued_requests_all_finish(cfg):
+    eng = ContinuousEngine(cfg, batch_size=2, max_len=64, seed=0)
+    ids = [eng.submit(Request(prompt=[i + 1, i + 2], max_new_tokens=3))
+           for i in range(5)]                      # 5 requests, 2 slots
+    done = eng.run_until_done()
+    assert set(done) == set(ids)
+    assert all(len(done[i].tokens) == 3 for i in ids)
+
+
+def test_matches_static_engine_greedy(cfg):
+    prompt, n = [1, 2, 3], 5
+    ce = ContinuousEngine(cfg, batch_size=2, max_len=64, seed=0)
+    rid = ce.submit(Request(prompt=prompt, max_new_tokens=n))
+    ce.submit(Request(prompt=[9, 9], max_new_tokens=4))  # co-tenant
+    done = ce.run_until_done()
+
+    se = Engine(cfg, batch_size=1, max_len=64, seed=0)
+    ref = se.generate([Request(prompt=prompt, max_new_tokens=n)])[0].tokens
+    assert done[rid].tokens == ref
+
+
+def test_slot_reuse_isolated(cfg):
+    """A request decoded in a reused slot matches one decoded in a fresh
+    engine (pos=-1 invalidation hides the previous occupant's KV)."""
+    eng = ContinuousEngine(cfg, batch_size=1, max_len=64, seed=0)
+    a = eng.submit(Request(prompt=[5, 6], max_new_tokens=4))
+    b = eng.submit(Request(prompt=[1, 2, 3], max_new_tokens=4))
+    done = eng.run_until_done()
+
+    fresh = ContinuousEngine(cfg, batch_size=1, max_len=64, seed=0)
+    rb = fresh.submit(Request(prompt=[1, 2, 3], max_new_tokens=4))
+    ref = fresh.run_until_done()
+    assert done[b].tokens == ref[rb].tokens
+
+
+@pytest.mark.parametrize("arch", ["falcon_mamba_7b", "mixtral_8x7b"])
+def test_continuous_batching_other_families(arch):
+    cfg = cfgs.get_smoke_config(arch).replace(dtype="float32")
+    eng = ContinuousEngine(cfg, batch_size=2, max_len=48, seed=0)
+    ids = [eng.submit(Request(prompt=[3, 4], max_new_tokens=3))
+           for _ in range(3)]
+    done = eng.run_until_done()
+    assert set(done) == set(ids)
+    for i in ids:
+        assert all(0 <= t < cfg.vocab_size for t in done[i].tokens)
+
+
+def test_eval_harness(cfg):
+    from repro.data.tokens import TokenPipeline
+    from repro.models import init_params
+    from repro.train.evaluate import evaluate
+    import jax
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    pipe = TokenPipeline(vocab_size=cfg.vocab_size, seq_len=16,
+                         global_batch=2)
+    m = evaluate(cfg, params, pipe, steps=2)
+    assert m["ce"] > 0 and m["ppl"] > 1
+    assert 0 <= m["accuracy"] <= 1

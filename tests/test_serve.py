@@ -1,0 +1,64 @@
+"""Serving engine: determinism, batching, SSM/hybrid decode paths."""
+import numpy as np
+import pytest
+
+import repro.configs as cfgs
+from repro.serve import Engine, Request
+
+
+@pytest.mark.parametrize("arch", ["olmo_1b", "falcon_mamba_7b",
+                                  "zamba2_2_7b", "mixtral_8x7b"])
+def test_greedy_decode_deterministic(arch):
+    cfg = cfgs.get_smoke_config(arch).replace(dtype="float32")
+    outs = []
+    for _ in range(2):
+        eng = Engine(cfg, batch_size=2, max_len=64, seed=0)
+        res = eng.generate([Request(prompt=[1, 2, 3], max_new_tokens=6)])
+        outs.append(res[0].tokens)
+    assert outs[0] == outs[1]
+    assert len(outs[0]) == 6
+    assert all(0 <= t < cfg.vocab_size for t in outs[0])
+
+
+def test_batched_requests_match_single(rng):
+    """A request decoded alone equals the same request in a batch
+    (static-slot engine, no cross-request interaction)."""
+    cfg = cfgs.get_smoke_config("olmo_1b").replace(dtype="float32")
+    eng1 = Engine(cfg, batch_size=2, max_len=64, seed=0)
+    solo = eng1.generate([Request(prompt=[5, 6, 7], max_new_tokens=5)])
+    eng2 = Engine(cfg, batch_size=2, max_len=64, seed=0)
+    pair = eng2.generate([Request(prompt=[5, 6, 7], max_new_tokens=5),
+                          Request(prompt=[9, 8], max_new_tokens=5)])
+    assert solo[0].tokens == pair[0].tokens
+
+
+def test_eos_stops_generation():
+    cfg = cfgs.get_smoke_config("olmo_1b").replace(dtype="float32")
+    eng = Engine(cfg, batch_size=1, max_len=64, seed=0)
+    free = eng.generate([Request(prompt=[1, 2], max_new_tokens=8)])
+    first = free[0].tokens[0]
+    eng2 = Engine(cfg, batch_size=1, max_len=64, seed=0)
+    stopped = eng2.generate([Request(prompt=[1, 2], max_new_tokens=8,
+                                     eos_id=int(first))])
+    assert stopped[0].tokens == [first]
+
+
+def test_temperature_sampling_varies():
+    cfg = cfgs.get_smoke_config("olmo_1b").replace(dtype="float32")
+    eng = Engine(cfg, batch_size=1, max_len=64, seed=0)
+    # untrained logits have std ~ sqrt(d); temperature must exceed that to
+    # actually flatten the distribution
+    a = eng.generate([Request(prompt=[1], max_new_tokens=12,
+                              temperature=50.0)])[0].tokens
+    b = eng.generate([Request(prompt=[1], max_new_tokens=12,
+                              temperature=50.0)])[0].tokens
+    assert a != b  # engine key advances between calls
+
+
+def test_whisper_engine_decodes():
+    """Enc-dec decode path: cross-attention against (stubbed) encoder K/V."""
+    cfg = cfgs.get_smoke_config("whisper_medium").replace(dtype="float32")
+    eng = Engine(cfg, batch_size=1, max_len=32, seed=0)
+    out = eng.generate([Request(prompt=[1, 2], max_new_tokens=4)])
+    assert len(out[0].tokens) == 4
+    assert all(0 <= t < cfg.vocab_size for t in out[0].tokens)

@@ -1,0 +1,17 @@
+# Reproducible entry points for the tier-1 verify command and benchmarks.
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test test-fast bench bench-sstep
+
+test:            ## tier-1 verify: the full suite, stop on first failure
+	$(PY) -m pytest -x -q
+
+test-fast:       ## skip the slow multi-device subprocess tests
+	$(PY) -m pytest -x -q -m "not slow"
+
+bench:           ## full benchmark suite (paper figures + s-step)
+	$(PY) -m benchmarks.run
+
+bench-sstep:     ## s-step communication-avoiding PCG bench only
+	$(PY) -m benchmarks.bench_sstep

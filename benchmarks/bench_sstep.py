@@ -1,0 +1,104 @@
+"""s-step (communication-avoiding) PCG: rounds and wall-clock vs s.
+
+Runs DiSCO on the synthetic logistic benchmark with ``pcg_block_s`` in
+{1, 2, 4, 8} for both partitionings and reports, per s:
+
+  * CommLedger rounds / floats (the paper-style MPI accounting, with the
+    s-step per-round costs from core/comm.py),
+  * total PCG iterations (s=1) vs rounds (s>1),
+  * wall-clock of the fit (jnp path — kernel interpret mode is python
+    emulation on CPU and would only measure the emulator),
+  * final gradient norm, to confirm the s-step trajectory reaches the same
+    Newton endpoint.
+
+Acceptance gate (ISSUE 1): rounds reduced >= 2x at s=4 vs s=1 with the
+final grad_norm matching the s=1 trajectory to within PCG tolerance.
+
+The problem is sized so PCG dominates the outer loop (small lam, tight
+pcg_rel_tol, modest tau): that is the communication-bound regime the
+s-step engine targets. See EXPERIMENTS.md §Perf for the roofline argument
+and the multi-shard caveats (DiSCO-S + Woodbury degenerates gracefully to
+locally-optimal CG because the tau-sample basis operator adds nothing the
+preconditioner doesn't already know — DESIGN.md §2.5).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Timer, save_json, table
+from repro.core import DiscoConfig, DiscoSolver
+from repro.data.synthetic import make_glm_data
+
+S_VALUES = (1, 2, 4, 8)
+
+
+def run(quiet=False, d=128, n=1024, max_outer=10):
+    X, y, _ = make_glm_data(d=d, n=n, cond_decay=1.5, seed=0)
+    kw = dict(loss="logistic", lam=1e-5, tau=16, max_outer=max_outer,
+              grad_tol=1e-8, pcg_rel_tol=0.02)
+
+    rows = []
+    gate = {}
+    for part in ("samples", "features"):
+        base_rounds = None
+        base_gn = None
+        for s in S_VALUES:
+            cfg = DiscoConfig(partition=part, pcg_block_s=s, **kw)
+            # one solver so the timed fit reuses the jitted step (a fresh
+            # DiscoSolver would re-jit a new closure and time compilation)
+            solver = DiscoSolver(X, y, cfg)
+            solver.fit()                    # warm-up: compile outside timer
+            with Timer() as t:
+                res = solver.fit()
+            gn = float(res.grad_norms[-1])
+            if s == 1:
+                base_rounds, base_gn = res.ledger.rounds, gn
+            row = {
+                "partition": part, "s": s,
+                "rounds": res.ledger.rounds,
+                "floats": res.ledger.floats,
+                "pcg_iters_or_rounds": int(sum(h["pcg_iters"]
+                                               for h in res.history)),
+                "wall_s": round(t.elapsed, 3),
+                "grad_norm": gn,
+                "rounds_vs_s1": round(base_rounds / res.ledger.rounds, 2),
+            }
+            rows.append(row)
+            if s == 4:
+                gate[part] = {
+                    "rounds_ratio": base_rounds / res.ledger.rounds,
+                    "grad_norm_s1": base_gn, "grad_norm_s4": gn,
+                }
+
+    out = table(rows, ["partition", "s", "rounds", "floats",
+                       "pcg_iters_or_rounds", "wall_s", "grad_norm",
+                       "rounds_vs_s1"],
+                title="s-step PCG — communication rounds vs s")
+    # both halves of the acceptance criterion: >=2x fewer rounds AND the
+    # s=4 trajectory ends at the s=1 gradient norm (within PCG tolerance)
+    ok = all(v["rounds_ratio"] >= 2.0
+             and v["grad_norm_s4"] <= max(10 * v["grad_norm_s1"], 1e-7)
+             for v in gate.values())
+    if not quiet:
+        print(out)
+        for part, v in gate.items():
+            print(f"[gate] {part}: rounds(s=1)/rounds(s=4) = "
+                  f"{v['rounds_ratio']:.2f}x (need >= 2.0), "
+                  f"grad_norm {v['grad_norm_s1']:.2e} -> "
+                  f"{v['grad_norm_s4']:.2e}")
+        print(f"[gate] {'PASS' if ok else 'FAIL'}: >=2x round reduction at "
+              "s=4 with matching final grad_norm")
+        print("[note] on a single-device run communication is free, so "
+              "wall_s shows only the extra local work per round (basis "
+              "build + Gram solves); rounds/floats are the modelled "
+              "distributed cost the engine trades it against.")
+    save_json("sstep", {"rows": rows, "gate": gate, "pass": ok})
+    return rows, ok
+
+
+def main():
+    return run()
+
+
+if __name__ == "__main__":
+    main()

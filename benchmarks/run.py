@@ -18,7 +18,7 @@ def main(argv=None):
                     help="fig4/fig5/table4/woodbury only (no fig3 sweep)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig3,fig4,fig5,table4,"
-                         "woodbury,amdahl,roofline")
+                         "sstep,woodbury,amdahl,roofline")
     args = ap.parse_args(argv)
 
     selected = set(args.only.split(",")) if args.only else None
@@ -27,7 +27,7 @@ def main(argv=None):
         if selected is not None:
             return name in selected
         if args.quick:
-            return name != "fig3"
+            return name not in ("fig3", "sstep")  # both run many full fits
         return True
 
     t0 = time.perf_counter()
@@ -38,6 +38,10 @@ def main(argv=None):
     if want("table4"):
         from benchmarks import bench_table4_comm
         bench_table4_comm.main()
+        print()
+    if want("sstep"):
+        from benchmarks import bench_sstep
+        bench_sstep.main()
         print()
     if want("woodbury"):
         from benchmarks import bench_woodbury

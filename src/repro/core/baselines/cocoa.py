@@ -23,7 +23,9 @@ from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import comm
-from repro.core.disco import _pad_to_multiple, _single_axis_mesh
+from repro.core.disco import _single_axis_mesh
+from repro.utils.compat import pcast, shard_map
+from repro.utils.padding import pad_to_multiple
 from repro.core.losses import get_loss
 
 
@@ -47,8 +49,8 @@ def cocoa_fit(X, y, cfg: CocoaConfig | None = None, mesh: Mesh | None = None):
     m = mesh.shape["data"]
     sigma_p = float(m)  # safe aggregation parameter for gamma = 1 (adding)
 
-    Xp, npad = _pad_to_multiple(X, 1, m)
-    yp, _ = _pad_to_multiple(y, 0, m)
+    Xp, npad = pad_to_multiple(X, 1, m)
+    yp, _ = pad_to_multiple(y, 0, m)
     wts = np.pad(np.ones(n, X.dtype), (0, npad))
     n_loc = Xp.shape[1] // m
     H = cfg.local_steps or n_loc
@@ -85,8 +87,8 @@ def cocoa_fit(X, y, cfg: CocoaConfig | None = None, mesh: Mesh | None = None):
             hi = jnp.where(root_right, hi, mid)
             return lo, hi
 
-        lo = lax.pcast(jnp.asarray(eps, xv.dtype), "data", to="varying")
-        hi = lax.pcast(jnp.asarray(1.0 - eps, xv.dtype), "data", to="varying")
+        lo = pcast(jnp.asarray(eps, xv.dtype), "data", to="varying")
+        hi = pcast(jnp.asarray(1.0 - eps, xv.dtype), "data", to="varying")
         lo, hi = lax.fori_loop(0, 40, body, (lo, hi))
         b = 0.5 * (lo + hi)
         return b * yi - alpha_i
@@ -108,7 +110,7 @@ def cocoa_fit(X, y, cfg: CocoaConfig | None = None, mesh: Mesh | None = None):
             dxa = dxa + delta * xi
             return alpha, dxa
 
-        dxa0 = lax.pcast(jnp.zeros_like(w), "data", to="varying")
+        dxa0 = pcast(jnp.zeros_like(w), "data", to="varying")
         alpha_loc, dxa = lax.fori_loop(0, H, body, (alpha_loc, dxa0))
         dw = lax.psum(dxa, "data") / lam_n        # the ONE d-vector reduceAll
         w_new = w + dw
@@ -121,7 +123,7 @@ def cocoa_fit(X, y, cfg: CocoaConfig | None = None, mesh: Mesh | None = None):
             + 0.5 * cfg.lam * jnp.vdot(w_new, w_new)
         return alpha_loc, w_new, dict(grad_norm=gnorm, f=fval)
 
-    fn = jax.jit(jax.shard_map(
+    fn = jax.jit(shard_map(
         step_local, mesh=mesh,
         in_specs=(P(None, "data"), P("data"), P("data"), P("data"),
                   P("data"), P(), P()),

@@ -22,7 +22,9 @@ from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import comm
-from repro.core.disco import _pad_to_multiple, _single_axis_mesh
+from repro.core.disco import _single_axis_mesh
+from repro.utils.compat import pcast, shard_map
+from repro.utils.padding import pad_to_multiple
 from repro.core.losses import get_loss
 
 
@@ -70,8 +72,8 @@ def dane_fit(X, y, cfg: DaneConfig | None = None, mesh: Mesh | None = None,
     mesh = mesh if mesh is not None else _single_axis_mesh("data")
     m = mesh.shape["data"]
 
-    Xp, npad = _pad_to_multiple(X, 1, m)
-    yp, _ = _pad_to_multiple(y, 0, m)
+    Xp, npad = pad_to_multiple(X, 1, m)
+    yp, _ = pad_to_multiple(y, 0, m)
     wts = np.pad(np.ones(n, X.dtype), (0, npad))
     xs = NamedSharding(mesh, P(None, "data"))
     ss = NamedSharding(mesh, P("data"))
@@ -105,7 +107,7 @@ def dane_fit(X, y, cfg: DaneConfig | None = None, mesh: Mesh | None = None,
             step = _local_cg(local_hvp_at(v), grad_h, cfg.local_cg_iters)
             return v - step
 
-        w_var = lax.pcast(w, "data", to="varying")  # carry becomes shard-local
+        w_var = pcast(w, "data", to="varying")  # carry becomes shard-local
         wj = lax.fori_loop(0, cfg.local_newton_iters, newton_body, w_var)
         w_new = lax.pmean(wj, "data")                   # round 2 (reduceAll d)
 
@@ -114,7 +116,7 @@ def dane_fit(X, y, cfg: DaneConfig | None = None, mesh: Mesh | None = None,
             + 0.5 * cfg.lam * jnp.vdot(w, w)
         return w_new, dict(grad_norm=gnorm, f=fval)
 
-    fn = jax.jit(jax.shard_map(
+    fn = jax.jit(shard_map(
         step_local, mesh=mesh,
         in_specs=(P(None, "data"), P("data"), P("data"), P()),
         out_specs=(P(), P())))

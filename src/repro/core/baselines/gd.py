@@ -15,7 +15,9 @@ from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import comm
-from repro.core.disco import _pad_to_multiple, _single_axis_mesh
+from repro.core.disco import _single_axis_mesh
+from repro.utils.compat import shard_map
+from repro.utils.padding import pad_to_multiple
 from repro.core.losses import get_loss
 
 
@@ -37,8 +39,8 @@ def gd_fit(X, y, cfg: GDConfig | None = None, mesh: Mesh | None = None):
     mesh = mesh if mesh is not None else _single_axis_mesh("data")
     m = mesh.shape["data"]
 
-    Xp, npad = _pad_to_multiple(X, 1, m)
-    yp, _ = _pad_to_multiple(y, 0, m)
+    Xp, npad = pad_to_multiple(X, 1, m)
+    yp, _ = pad_to_multiple(y, 0, m)
     wts = np.pad(np.ones(n, X.dtype), (0, npad))
     Xs = jax.device_put(jnp.asarray(Xp), NamedSharding(mesh, P(None, "data")))
     ys = jax.device_put(jnp.asarray(yp), NamedSharding(mesh, P("data")))
@@ -64,7 +66,7 @@ def gd_fit(X, y, cfg: GDConfig | None = None, mesh: Mesh | None = None):
             + 0.5 * cfg.lam * jnp.vdot(w, w)
         return w - step * g, dict(grad_norm=gnorm, f=fval)
 
-    fn = jax.jit(jax.shard_map(
+    fn = jax.jit(shard_map(
         step_local, mesh=mesh,
         in_specs=(P(None, "data"), P("data"), P("data"), P()),
         out_specs=(P(), P())))

@@ -71,6 +71,30 @@ def disco_f_pcg_cost(n: int, iters: int) -> tuple[int, int, int]:
     return 1 * iters, (n + 2) * iters, 3 * iters
 
 
+def disco_s_sstep_cost(d: int, s: int, rounds: int) -> tuple[int, int, int]:
+    """s-step DiSCO-S (core/pcg.py, block_s > 1): per round the master
+    broadcasts the (d, s+1) trial basis and reduceAlls the (d, s+1) batched
+    HVP — the same broadcast+reduceAll pair as ONE classic iteration but
+    carrying s+1 vectors, advancing s Krylov dimensions. The Gram system is
+    replicated, so it costs nothing. Under SPMD the pair collapses into a
+    single all-reduce (1 collective/round vs s for classic)."""
+    k = s + 1
+    return 2 * rounds, 2 * d * k * rounds, 1 * rounds
+
+
+def disco_f_sstep_cost(n: int, s: int, rounds: int) -> tuple[int, int, int]:
+    """s-step DiSCO-F: per round ONE (n, s) reduceAll (the batched pass-A
+    payload — only the s Krylov columns; H p_prev is carried from the
+    previous round's W a, costing nothing) plus one fused small reduceAll
+    of the stacked Gram system (2(s+1)^2 + (s+1) floats — U^T W, U^T U,
+    U^T r concatenated into a single psum payload). Consistent with
+    ``disco_f_pcg_cost``, the small reduce is the s-step analogue of the
+    classic path's "thin red arrow" scalar reduceAlls: counted in floats
+    and SPMD collectives, not as a vector *round*."""
+    k = s + 1
+    return 1 * rounds, (n * s + 2 * k * k + k) * rounds, 2 * rounds
+
+
 def dane_iter_cost(d: int) -> tuple[int, int, int]:
     return 2, 2 * d, 2
 

@@ -28,6 +28,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core import comm
 from repro.core.losses import get_loss
 from repro.core.pcg import pcg_features, pcg_samples
+from repro.utils.compat import shard_map
+from repro.utils.padding import pad_to_multiple
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,6 +47,7 @@ class DiscoConfig:
     hessian_subsample: float = 1.0  # paper §5.4; fraction of samples in H u
     sag_epochs: int = 5             # inner epochs for the 'sag' baseline
     use_kernel: bool = False        # Pallas glm_hvp in the PCG hot path
+    pcg_block_s: int = 1            # s-step PCG: Krylov vectors per comm round
     seed: int = 0
 
 
@@ -68,14 +71,15 @@ def _single_axis_mesh(axis_name: str) -> Mesh:
     return jax.make_mesh((len(jax.devices()),), (axis_name,))
 
 
-def _pad_to_multiple(a: np.ndarray, axis: int, m: int) -> tuple[np.ndarray, int]:
-    size = a.shape[axis]
-    pad = (-size) % m
-    if pad:
-        widths = [(0, 0)] * a.ndim
-        widths[axis] = (0, pad)
-        a = np.pad(a, widths)
-    return a, pad
+def _shard_subsample_mask(key, frac, shape, axis_name):
+    """Per-shard Bernoulli mask for Hessian subsampling (paper §5.4).
+
+    The key is folded with the shard's axis index so every shard draws an
+    *independent* subsample — with the raw key all shards would drop the
+    same sample positions, biasing the subsampled Hessian.
+    """
+    key = jax.random.fold_in(key, lax.axis_index(axis_name))
+    return jax.random.bernoulli(key, frac, shape)
 
 
 class DiscoSolver:
@@ -101,9 +105,9 @@ class DiscoSolver:
         y_tau = y[: self.tau].copy()
 
         if cfg.partition == "features":
-            Xp, self._dpad = _pad_to_multiple(X, 0, self.m)
+            Xp, self._dpad = pad_to_multiple(X, 0, self.m)
             self.d_padded = Xp.shape[0]
-            X_tau_p, _ = _pad_to_multiple(X_tau, 0, self.m)
+            X_tau_p, _ = pad_to_multiple(X_tau, 0, self.m)
             xs = NamedSharding(self.mesh, P(axis, None))
             rep = NamedSharding(self.mesh, P())
             self.X = jax.device_put(jnp.asarray(Xp), xs)
@@ -115,8 +119,8 @@ class DiscoSolver:
             self._w_sharding = NamedSharding(self.mesh, P(axis))
             self._w_shape = (self.d_padded,)
         elif cfg.partition == "samples":
-            Xp, npad = _pad_to_multiple(X, 1, self.m)
-            yp, _ = _pad_to_multiple(y, 0, self.m)
+            Xp, npad = pad_to_multiple(X, 1, self.m)
+            yp, _ = pad_to_multiple(y, 0, self.m)
             wts = np.ones(self.n, X.dtype)
             wts = np.pad(wts, (0, npad))
             self.n_padded = Xp.shape[1]
@@ -163,13 +167,13 @@ class DiscoSolver:
                     X_loc, c_eff, n, cfg.lam, g_loc, eps, cfg.max_pcg,
                     tau_idx=jnp.arange(tau), coeffs_tau=coeffs_tau,
                     mu=cfg.mu, axis_name=axis, precond=cfg.precond,
-                    use_kernel=cfg.use_kernel)
+                    use_kernel=cfg.use_kernel, block_s=cfg.pcg_block_s)
                 w_new = w_loc - res.v / (1.0 + res.delta)
                 stats = dict(grad_norm=gnorm, f=fval, pcg_iters=res.iters,
                              delta=res.delta, pcg_r_norm=res.r_norm)
                 return w_new, stats
 
-            fn = jax.shard_map(
+            fn = shard_map(
                 step_local, mesh=self.mesh,
                 in_specs=(P(axis, None), P(axis, None), P(), P(), P(axis), P()),
                 out_specs=(P(axis), P()),
@@ -189,12 +193,7 @@ class DiscoSolver:
                                 axis) / n + 0.5 * cfg.lam * jnp.vdot(w, w)
 
                 if frac < 1.0:
-                    mask = jax.random.bernoulli(
-                        key, frac, margins.shape)  # same key -> identical
-                    # per-shard masks differ via axis index folding
-                    mask = jax.random.bernoulli(
-                        jax.random.fold_in(key, lax.axis_index(axis)),
-                        frac, margins.shape)
+                    mask = _shard_subsample_mask(key, frac, margins.shape, axis)
                     c_eff = c * mask / frac
                 else:
                     c_eff = c
@@ -205,13 +204,14 @@ class DiscoSolver:
                     X_loc, c_eff, n, cfg.lam, g, eps, cfg.max_pcg,
                     X_tau=X_tau, coeffs_tau=coeffs_tau, mu=cfg.mu,
                     axis_name=axis, precond=cfg.precond,
-                    sag_epochs=cfg.sag_epochs, use_kernel=cfg.use_kernel)
+                    sag_epochs=cfg.sag_epochs, use_kernel=cfg.use_kernel,
+                    block_s=cfg.pcg_block_s, axis_size=self.m)
                 w_new = w - res.v / (1.0 + res.delta)
                 stats = dict(grad_norm=gnorm, f=fval, pcg_iters=res.iters,
                              delta=res.delta, pcg_r_norm=res.r_norm)
                 return w_new, stats
 
-            fn = jax.shard_map(
+            fn = shard_map(
                 step_local, mesh=self.mesh,
                 in_specs=(P(None, axis), P(axis), P(axis), P(), P(), P(), P()),
                 out_specs=(P(), P()),
@@ -225,12 +225,21 @@ class DiscoSolver:
 
     # ------------------------------------------------------------------
     def _comm_costs(self, pcg_iters: int) -> tuple[int, int, int]:
+        """``pcg_iters`` is PCG iterations for the classic path and *rounds*
+        (each worth ``pcg_block_s`` iterations) for the s-step path."""
+        s = self.cfg.pcg_block_s
         if self.cfg.partition == "features":
             r1, f1, s1 = comm.disco_f_outer_cost(self.n, self.d, self.m)
-            r2, f2, s2 = comm.disco_f_pcg_cost(self.n, pcg_iters)
+            if s > 1:
+                r2, f2, s2 = comm.disco_f_sstep_cost(self.n, s, pcg_iters)
+            else:
+                r2, f2, s2 = comm.disco_f_pcg_cost(self.n, pcg_iters)
         else:
             r1, f1, s1 = comm.disco_s_outer_cost(self.d)
-            r2, f2, s2 = comm.disco_s_pcg_cost(self.d, pcg_iters)
+            if s > 1:
+                r2, f2, s2 = comm.disco_s_sstep_cost(self.d, s, pcg_iters)
+            else:
+                r2, f2, s2 = comm.disco_s_pcg_cost(self.d, pcg_iters)
         return r1 + r2, f1 + f2, s1 + s2
 
     def fit(self, w0: np.ndarray | None = None) -> DiscoResult:

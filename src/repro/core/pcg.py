@@ -15,6 +15,26 @@ the damped step of Algorithm 1.
   H u costs one n-vector all-reduce plus two scalar all-reduces, and the
   Woodbury preconditioner is block-diagonal and fully local.
 
+s-step (communication-avoiding) mode — ``block_s > 1`` (DESIGN.md §2):
+
+Classic PCG pays its collectives once per Krylov dimension. The s-step
+engine instead advances ``s`` dimensions per *round*: it builds an
+(s+1)-column trial basis  U = [basis(K_s(M^{-1} H~, M^{-1} r)), p_prev]
+from a **zero-communication basis operator** H~ (the exact local Hessian
+block for DiSCO-F, the replicated tau-sample Hessian estimate for DiSCO-S;
+both equal the true H on a single shard), applies the *true* H to all
+columns with ONE batched multi-vector HVP (kernels/glm_hvp.py multi-vector
+passes — one collective carrying an s+1-wide payload), assembles the small
+Gram system with one fused psum payload, and takes the exact Galerkin step
+over span(U) by solving the (s+1)x(s+1) system locally on every shard.
+
+Because the Galerkin step uses the true H (residual update r <- r - (H U) a
+is exact), every round is a monotone H-norm error reduction regardless of
+basis quality; with the exact basis operator and the carried previous-round
+direction p_prev, one round reproduces s classic PCG iterations. A
+conditioning guard (whitened Gram solve + hard fallback) degrades to the
+classic s=1 step when the monomial basis collapses.
+
 These functions are written to run **inside shard_map** — all cross-device
 traffic is explicit ``lax.psum``. Single-device meshes degenerate gracefully
 (psum over an axis of size 1).
@@ -33,7 +53,7 @@ from repro.core.preconditioner import WoodburyPreconditioner, sag_solve
 class PCGResult(NamedTuple):
     v: jnp.ndarray        # inexact Newton direction (local shard in DiSCO-F)
     delta: jnp.ndarray    # sqrt(v^T H v)  (scalar, replicated)
-    iters: jnp.ndarray    # number of PCG iterations performed
+    iters: jnp.ndarray    # PCG iterations (classic) or rounds (s-step)
     r_norm: jnp.ndarray   # final residual norm
 
 
@@ -78,12 +98,190 @@ def _pcg_loop(hvp, apply_precond, psum_dot, g, eps, max_iter, dtype):
 
 
 # ---------------------------------------------------------------------------
+# s-step engine (communication-avoiding PCG)
+# ---------------------------------------------------------------------------
+
+def _solve_round(G, B, b, s, kappa_max=1e10):
+    """Galerkin coefficients over the trial basis:  a ~= G^+ b.
+
+    The solve is *whitened* with the basis Gram matrix B = U^T U — the
+    algebraic equivalent of CholeskyQR-orthonormalizing U without ever
+    communicating the orthonormal basis: eigendirections of B below a
+    relative floor (degenerate/parallel basis columns, e.g. the zero
+    p_prev on round one) are dropped, the rest are scaled to unit length,
+    and the projected Hessian is (pseudo-)inverted on the retained,
+    well-conditioned subspace. This is the graduated part of the
+    monomial-basis conditioning guard.
+
+    The hard fallback: if the monomial block B[:s,:s] is beyond salvage
+    (cond > kappa_max) or the whitened solve produced non-finite values,
+    fall back to the s=1 step over {q_1 = M^{-1} r, p_prev} — the
+    locally-optimal two-term Galerkin step that is exactly one classic
+    preconditioned CG iteration (steepest descent + conjugate momentum).
+    """
+    dtype = G.dtype
+    tiny = jnp.asarray(1e-30, dtype)
+    G = 0.5 * (G + G.T)
+    B = 0.5 * (B + B.T)
+
+    beig, Vb = jnp.linalg.eigh(B)
+    bmax = jnp.maximum(jnp.max(jnp.abs(beig)), tiny)
+    keep = beig > 5e-8 * bmax
+    inv_sqrt = jnp.where(keep, lax.rsqrt(jnp.where(keep, beig, 1.0)), 0.0)
+    T = Vb * inv_sqrt[None, :]                       # whitening transform
+
+    Gt = T.T @ G @ T
+    Gt = 0.5 * (Gt + Gt.T)
+    geig, Vg = jnp.linalg.eigh(Gt)
+    gmax = jnp.maximum(jnp.max(jnp.abs(geig)), tiny)
+    gkeep = geig > 1e-6 * gmax
+    ginv = jnp.where(gkeep, 1.0 / jnp.where(gkeep, geig, 1.0), 0.0)
+    a = T @ (Vg @ (ginv * (Vg.T @ (T.T @ b))))
+
+    beig_m = jnp.linalg.eigvalsh(B[:s, :s])          # monomial block only
+    cond_m = jnp.max(beig_m) / jnp.maximum(jnp.min(beig_m), tiny)
+
+    # 2x2 Galerkin over columns {q_1, p_prev} (indices 0 and s). Closed
+    # form so overflowed middle-column Gram entries can't contaminate it;
+    # degenerates to the pure q_1 step when p_prev = 0 (det = 0).
+    g00, g01, g11 = G[0, 0], G[0, s], G[s, s]
+    b0, b1 = b[0], b[s]
+    det = g00 * g11 - g01 * g01
+    safe_det = jnp.maximum(det, tiny)
+    x0 = jnp.where(det > tiny * jnp.maximum(g00 * g11, tiny),
+                   (g11 * b0 - g01 * b1) / safe_det,
+                   b0 / jnp.maximum(g00, tiny))
+    x1 = jnp.where(det > tiny * jnp.maximum(g00 * g11, tiny),
+                   (g00 * b1 - g01 * b0) / safe_det, 0.0)
+    a_fb = jnp.zeros_like(b).at[0].set(x0).at[s].set(x1)
+
+    bad = jnp.logical_or(cond_m > kappa_max,
+                         jnp.logical_not(jnp.all(jnp.isfinite(a))))
+    return jnp.where(bad, a_fb, a)
+
+
+def _sstep_loop(build_basis, hvp_round, gram, update_scales, psum_dot,
+                g, eps, max_rounds, s):
+    """Shared s-step round skeleton (both partitionings).
+
+    build_basis(r, p_prev, scales) -> U (dim, s+1), zero communication
+    hvp_round(U, Hp) -> H U  with the round's ONE batched-vector
+                     collective. ``Hp = H p_prev`` is carried in the loop
+                     state (it is last round's ``W a``): a variant whose
+                     basis keeps the p_prev column verbatim (features) can
+                     splice it in and batch only the s Krylov columns
+    gram(U, W, r) -> (U^T W, U^T U, U^T r) globally (fused psum payload
+                     for sharded vectors, plain local matmuls for
+                     replicated ones)
+    update_scales(scales, B) -> per-step basis scale estimates for the
+                     next round (features); identity for samples (MGS
+                     normalizes exactly for free)
+    """
+    v0 = jnp.zeros_like(g)
+    r0 = g
+    p0 = jnp.zeros_like(g)
+    Hp0 = jnp.zeros_like(g)
+    Hv0 = jnp.zeros_like(g)
+    scales0 = jnp.ones((max(s - 1, 1),), g.dtype)
+
+    def cond(state):
+        t, _, r, _, _, _, _ = state
+        rn = jnp.sqrt(psum_dot(r, r))
+        return jnp.logical_and(t < max_rounds, rn > eps)
+
+    def body(state):
+        t, v, r, p, Hp, Hv, scales = state
+        U = build_basis(r, p, scales)
+        W = hvp_round(U, Hp)
+        G, B, b = gram(U, W, r)
+        a = _solve_round(G, B, b, s)
+        dv = U @ a
+        Hdv = W @ a
+        return (t + 1, v + dv, r - Hdv, dv, Hdv, Hv + Hdv,
+                update_scales(scales, B))
+
+    state = (jnp.zeros((), jnp.int32), v0, r0, p0, Hp0, Hv0, scales0)
+    t, v, r, p, Hp, Hv, _ = lax.while_loop(cond, body, state)
+    delta = jnp.sqrt(jnp.maximum(psum_dot(v, Hv), 0.0))
+    r_norm = jnp.sqrt(psum_dot(r, r))
+    return PCGResult(v=v, delta=delta, iters=t, r_norm=r_norm)
+
+
+def _krylov_columns(r, apply_precond, basis_op, s, scales):
+    """[q_1, ..., q_s] with q_1 = M^{-1} r,  q_{i+1} = M^{-1} H~ q_i / scale_i.
+
+    Monomial basis of the *preconditioned* zero-communication operator —
+    spans K_s(M^{-1} H~, M^{-1} r), which with the exact basis operator is
+    exactly the space s classic PCG iterations search.
+    """
+    cols = [apply_precond(r)]
+    for i in range(s - 1):
+        nxt = apply_precond(basis_op(cols[-1])) / scales[i]
+        # f32 range guard: an overflowed column becomes a (poor but
+        # harmless) trial direction instead of poisoning the Gram system —
+        # the Galerkin step is exact for whatever columns U actually holds.
+        cols.append(jnp.where(jnp.isfinite(nxt), nxt, 0.0))
+    return cols
+
+
+def _mgs(cols):
+    """Modified Gram-Schmidt over a list of same-shape vectors.
+
+    Only valid when the vectors are replicated (DiSCO-S): every dot is
+    local, so the orthonormalization is communication-free. Columns that
+    vanish under orthogonalization (exhausted Krylov space, zero p_prev)
+    are returned as zeros and dropped later by the whitened Gram solve.
+    """
+    out = []
+    for c in cols:
+        w = c
+        for o in out:
+            w = w - jnp.vdot(o, w) * o
+        nw = jnp.sqrt(jnp.vdot(w, w))
+        out.append(jnp.where(nw > 1e-30, w / jnp.maximum(nw, 1e-30),
+                             jnp.zeros_like(w)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# preconditioner factories (shared by classic and s-step paths)
+# ---------------------------------------------------------------------------
+
+def _samples_precond(precond, X_tau, coeffs_tau, lam, mu, sag_epochs):
+    if precond == "woodbury":
+        P = WoodburyPreconditioner.build(X_tau, coeffs_tau, lam, mu)
+        return P.apply_inv
+    if precond == "sag":
+        # original DiSCO: iterative inner solve, replicated on every device
+        # (the master bottleneck, see DESIGN.md §2)
+        return lambda r: sag_solve(X_tau, coeffs_tau, lam, mu, r,
+                                   epochs=sag_epochs)
+    if precond == "none":
+        return lambda r: r
+    raise ValueError(f"unknown precond {precond!r}")
+
+
+def _features_precond(precond, X_loc, tau_idx, coeffs_tau, lam, mu):
+    if precond == "woodbury":
+        # block-diagonal P^{[j]}: local feature rows of the tau samples,
+        # zero communication (paper contribution 2).
+        X_tau_loc = X_loc[:, tau_idx]
+        P = WoodburyPreconditioner.build_blockdiag(X_tau_loc, coeffs_tau,
+                                                   lam, mu)
+        return P.apply_inv
+    if precond == "none":
+        return lambda r: r
+    raise ValueError(f"unknown precond {precond!r}")
+
+
+# ---------------------------------------------------------------------------
 # Algorithm 2 — DiSCO-S (sample partitioning)
 # ---------------------------------------------------------------------------
 
 def pcg_samples(X_loc, coeffs_loc, n_global, lam, g, eps, max_iter,
                 X_tau=None, coeffs_tau=None, mu=0.0, axis_name="data",
-                precond="woodbury", sag_epochs=5, use_kernel=False):
+                precond="woodbury", sag_epochs=5, use_kernel=False,
+                block_s=1, axis_size=None):
     """Runs inside shard_map over ``axis_name``.
 
     X_loc       : (d, n_loc) local sample columns
@@ -93,6 +291,11 @@ def pcg_samples(X_loc, coeffs_loc, n_global, lam, g, eps, max_iter,
     X_tau       : (d, tau) replicated preconditioner samples ("master's"
                   first tau columns, broadcast once per outer iteration)
     precond     : 'woodbury' (DiSCO-S), 'sag' (original DiSCO), 'none' (CG)
+    block_s     : >1 selects the s-step engine: ``block_s`` Krylov
+                  dimensions per communication round (``iters`` then counts
+                  rounds). ``max_iter`` caps rounds in that mode.
+    axis_size   : static size of ``axis_name`` (pass 1 on a single-shard
+                  mesh so the s-step basis operator is the exact Hessian)
     """
     n_global = jnp.asarray(n_global, X_loc.dtype)
 
@@ -110,22 +313,78 @@ def pcg_samples(X_loc, coeffs_loc, n_global, lam, g, eps, max_iter,
             local = X_loc @ (coeffs_loc * (X_loc.T @ u))
             return lax.psum(local, axis_name) / n_global + lam * u
 
-    if precond == "woodbury":
-        P = WoodburyPreconditioner.build(X_tau, coeffs_tau, lam, mu)
-        apply_precond = P.apply_inv
-    elif precond == "sag":
-        # original DiSCO: iterative inner solve, replicated on every device
-        # (the master bottleneck, see DESIGN.md §2)
-        def apply_precond(r):
-            return sag_solve(X_tau, coeffs_tau, lam, mu, r, epochs=sag_epochs)
-    elif precond == "none":
-        apply_precond = lambda r: r
-    else:
-        raise ValueError(f"unknown precond {precond!r}")
+    apply_precond = _samples_precond(precond, X_tau, coeffs_tau, lam, mu,
+                                     sag_epochs)
 
     # state vectors are replicated -> dots are local
     psum_dot = lambda a, b: jnp.vdot(a, b)
-    return _pcg_loop(hvp, apply_precond, psum_dot, g, eps, max_iter, X_loc.dtype)
+
+    if block_s <= 1:
+        return _pcg_loop(hvp, apply_precond, psum_dot, g, eps, max_iter,
+                         X_loc.dtype)
+
+    s = int(block_s)
+    if axis_size is None:
+        raise ValueError("s-step pcg_samples needs the static mesh axis "
+                         "size: pass axis_size (DiscoSolver passes its "
+                         "shard count; single-device callers pass 1 to get "
+                         "the exact basis operator)")
+
+    # Zero-communication basis operator: the replicated tau-sample Hessian
+    # estimate (exact on a single shard, where X_loc covers all samples).
+    if axis_size == 1:
+        if use_kernel:
+            from repro.kernels import ops as kops
+
+            def basis_op(u):
+                z = kops.xt_u(X_loc, u)
+                return kops.x_cz_local(X_loc, coeffs_loc, z) / n_global \
+                    + lam * u
+        else:
+            def basis_op(u):
+                return X_loc @ (coeffs_loc * (X_loc.T @ u)) / n_global \
+                    + lam * u
+    else:
+        if X_tau is None:
+            raise ValueError("s-step pcg_samples on a multi-shard axis "
+                             "needs replicated X_tau for the basis operator")
+        tau = jnp.asarray(X_tau.shape[1], X_tau.dtype)
+
+        def basis_op(u):
+            return X_tau @ (coeffs_tau * (X_tau.T @ u)) / tau + lam * u
+
+    def build_basis(r, p, scales):
+        del scales  # MGS normalizes exactly; no scale estimates needed
+        cols = _krylov_columns(r, apply_precond, basis_op, s,
+                               jnp.ones((max(s - 1, 1),), r.dtype))
+        cols.append(p)
+        return jnp.stack(_mgs(cols), axis=1)
+
+    # MGS mixes the carried direction into all columns, so the whole basis
+    # goes through the batched HVP (Hp is not reusable here).
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        def hvp_round(U, Hp):
+            del Hp
+            Z = kops.xt_multi(X_loc, U)
+            W_loc = kops.x_cz_multi(X_loc, coeffs_loc, Z)
+            return lax.psum(W_loc, axis_name) / n_global + lam * U
+    else:
+        def hvp_round(U, Hp):
+            del Hp
+            W_loc = X_loc @ (coeffs_loc[:, None] * (X_loc.T @ U))
+            return lax.psum(W_loc, axis_name) / n_global + lam * U
+
+    def gram(U, W, r):
+        # replicated vectors: the whole Gram system is local, zero comm —
+        # the batched HVP psum above is the round's ONLY collective.
+        return U.T @ W, U.T @ U, U.T @ r
+
+    update_scales = lambda scales, B: scales
+
+    return _sstep_loop(build_basis, hvp_round, gram, update_scales,
+                       psum_dot, g, eps, max_iter, s)
 
 
 # ---------------------------------------------------------------------------
@@ -134,7 +393,7 @@ def pcg_samples(X_loc, coeffs_loc, n_global, lam, g, eps, max_iter,
 
 def pcg_features(X_loc, coeffs, n_global, lam, g_loc, eps, max_iter,
                  tau_idx=None, coeffs_tau=None, mu=0.0, axis_name="model",
-                 precond="woodbury", use_kernel=False):
+                 precond="woodbury", use_kernel=False, block_s=1):
     """Runs inside shard_map over ``axis_name``.
 
     X_loc      : (d_j, n) local feature rows (all samples)
@@ -142,6 +401,7 @@ def pcg_features(X_loc, coeffs, n_global, lam, g_loc, eps, max_iter,
                  reduced margins, which every shard already holds)
     g_loc      : (d_j,) local gradient shard
     tau_idx    : (tau,) indices of the preconditioner samples
+    block_s    : >1 selects the s-step engine (see pcg_samples)
     """
     n_global = jnp.asarray(n_global, X_loc.dtype)
 
@@ -160,17 +420,82 @@ def pcg_features(X_loc, coeffs, n_global, lam, g_loc, eps, max_iter,
             z = lax.psum(X_loc.T @ u_loc, axis_name)          # (n,)
             return X_loc @ (coeffs * z) / n_global + lam * u_loc
 
-    if precond == "woodbury":
-        # block-diagonal P^{[j]}: local feature rows of the tau samples,
-        # zero communication (paper contribution 2).
-        X_tau_loc = X_loc[:, tau_idx]
-        P = WoodburyPreconditioner.build_blockdiag(X_tau_loc, coeffs_tau, lam, mu)
-        apply_precond = P.apply_inv
-    elif precond == "none":
-        apply_precond = lambda r: r
-    else:
-        raise ValueError(f"unknown precond {precond!r}")
+    apply_precond = _features_precond(precond, X_loc, tau_idx, coeffs_tau,
+                                      lam, mu)
 
     # state vectors are sharded -> dots need a scalar psum (cheap)
     psum_dot = lambda a, b: lax.psum(jnp.vdot(a, b), axis_name)
-    return _pcg_loop(hvp, apply_precond, psum_dot, g_loc, eps, max_iter, X_loc.dtype)
+
+    if block_s <= 1:
+        return _pcg_loop(hvp, apply_precond, psum_dot, g_loc, eps, max_iter,
+                         X_loc.dtype)
+
+    s = int(block_s)
+
+    # Zero-communication basis operator: the block-diagonal local Hessian
+    # X_j diag(c) X_j^T / n + lam I (exact on a single shard, where the
+    # local rows are all rows).
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        def basis_op(u_loc):
+            z = kops.xt_u(X_loc, u_loc)      # deliberately NOT psum'd
+            return kops.x_cz_local(X_loc, coeffs, z) / n_global + lam * u_loc
+    else:
+        def basis_op(u_loc):
+            return X_loc @ (coeffs * (X_loc.T @ u_loc)) / n_global \
+                + lam * u_loc
+
+    def build_basis(r_loc, p_loc, scales):
+        # Sharded vectors: exact norms would cost a psum per basis step, so
+        # columns are range-managed with the previous round's per-step
+        # growth estimates (replicated scalars recycled from diag(B) of the
+        # fused Gram payload); the whitened solve absorbs the remaining
+        # column scaling exactly.
+        cols = _krylov_columns(r_loc, apply_precond, basis_op, s, scales)
+        cols.append(p_loc)
+        return jnp.stack(cols, axis=1)
+
+    # The basis keeps the p_prev column verbatim, and H p_prev is already
+    # in hand from last round's W a (carried as Hp in the loop state) — so
+    # only the s Krylov columns ride the batched HVP and the communicated
+    # payload is (n, s), not (n, s+1).
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        def hvp_round(U, Hp):
+            Uk = U[:, :s]
+            Z = lax.psum(kops.xt_multi(X_loc, Uk), axis_name)  # (n, s)
+            Wk = kops.x_cz_multi(X_loc, coeffs, Z) / n_global + lam * Uk
+            return jnp.concatenate([Wk, Hp[:, None]], axis=1)
+    else:
+        def hvp_round(U, Hp):
+            Uk = U[:, :s]
+            Z = lax.psum(X_loc.T @ Uk, axis_name)              # (n, s)
+            Wk = X_loc @ (coeffs[:, None] * Z) / n_global + lam * Uk
+            return jnp.concatenate([Wk, Hp[:, None]], axis=1)
+
+    def gram(U, W, r_loc):
+        # single fused all-reduce: U^T W, U^T U and U^T r concatenated into
+        # one psum payload of (s+1)^2 * 2 + (s+1) floats (DESIGN.md §2.3) —
+        # the s-step replacement for classic PCG's 2 scalar psums/iteration.
+        k = U.shape[1]
+        payload = jnp.concatenate([(U.T @ W).ravel(), (U.T @ U).ravel(),
+                                   U.T @ r_loc])
+        payload = lax.psum(payload, axis_name)
+        G = payload[: k * k].reshape(k, k)
+        B = payload[k * k: 2 * k * k].reshape(k, k)
+        b = payload[2 * k * k:]
+        return G, B, b
+
+    def update_scales(scales, B):
+        # s >= 2 here (block_s > 1), so there is always at least one ratio
+        dgn = jnp.sqrt(jnp.maximum(jnp.diagonal(B)[:s], 1e-30))
+        ratios = dgn[1:] / jnp.maximum(dgn[:-1], 1e-30)
+        # overflowed diag(B) entries give inf/inf = NaN, which clip would
+        # propagate forever — treat them as "no information" instead
+        ratios = jnp.where(jnp.isfinite(ratios), ratios, 1.0)
+        return jnp.clip(scales * ratios, 1e-6, 1e6)
+
+    return _sstep_loop(build_basis, hvp_round, gram, update_scales,
+                       psum_dot, g_loc, eps, max_iter, s)

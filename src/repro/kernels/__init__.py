@@ -1,11 +1,14 @@
 """Pallas TPU kernels for the framework's compute hot spots.
 
   glm_hvp         GLM Hessian-vector product (the DiSCO PCG inner loop)
+  glm_hvp_multi   batched HVP over s probe vectors (the s-step PCG round)
   flash_attention online-softmax attention (prefill path of the model zoo)
 
 Each kernel ships with a jnp oracle (``ref.py``) and a jit'd wrapper
 (``ops.py``) that dispatches native/interpret/ref by backend.
 """
-from repro.kernels.ops import glm_hvp, xt_u, flash_attention
+from repro.kernels.ops import (flash_attention, glm_hvp, glm_hvp_multi,
+                               x_cz_multi, xt_multi, xt_u)
 
-__all__ = ["glm_hvp", "xt_u", "flash_attention"]
+__all__ = ["glm_hvp", "glm_hvp_multi", "xt_u", "xt_multi", "x_cz_multi",
+           "flash_attention"]

@@ -22,6 +22,18 @@ VMEM budget per program (defaults bd = bn = 512, f32):
 The HVP is memory-bound (reads X twice per PCG iteration; arithmetic
 intensity ~= 2 flops/byte per pass), so block shape mainly controls DMA
 efficiency, not MXU occupancy — see EXPERIMENTS.md §Perf.
+
+Multi-vector variants (the s-step PCG engine, core/pcg.py):
+
+  pass A  Z = X^T U        (kernel ``xt_multi``)   U: (d, s) -> Z: (n, s)
+  pass B  Y = X (c .* Z)   (kernel ``x_cz_multi``) Z: (n, s) -> Y: (d, s)
+
+Same (bd, bn) tiling over X, but each X tile read from HBM is amortized
+across all s probe vectors — arithmetic intensity rises from matvec
+(~2 flops/byte) towards matmul (~2s flops/byte), and the two passes feed the
+single fused all-reduce of the s-step round. ``s`` is padded to a
+lane-friendly multiple (128) by the ops.py wrappers so the (bd, s)/(bn, s)
+vector tiles stay VREG/MXU aligned.
 """
 from __future__ import annotations
 
@@ -104,3 +116,91 @@ def x_cz(X, c, z, *, block_d=512, block_n=512, interpret=False):
         interpret=interpret,
     )(X, c.reshape(1, n), z.reshape(1, n))
     return out.reshape(d).astype(X.dtype)
+
+
+# ---------------------------------------------------------------------------
+# multi-vector pass A:  Z = X^T U     (s probe vectors per X tile read)
+# ---------------------------------------------------------------------------
+
+def _xt_multi_kernel(x_ref, u_ref, z_ref):
+    """Grid (nj, di): Z[bn, s] += X[bd, bn]^T @ U[bd, s]; di fastest.
+
+    The contraction is expressed as a dot_general over dim 0 of both
+    operands so no transposed copy of the X tile is materialized in VMEM.
+    """
+    di = pl.program_id(1)
+
+    @pl.when(di == 0)
+    def _init():
+        z_ref[...] = jnp.zeros_like(z_ref)
+
+    x = x_ref[...]
+    u = u_ref[...]
+    z_ref[...] += jax.lax.dot_general(
+        x, u, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def xt_multi(X, U, *, block_d=512, block_n=512, interpret=False):
+    """Z = X^T U.   X: (d, n), U: (d, s) -> Z: (n, s).  Shapes pre-padded
+    (d, n to block multiples; s to a lane multiple)."""
+    d, n = X.shape
+    s = U.shape[1]
+    assert U.shape[0] == d, (X.shape, U.shape)
+    assert d % block_d == 0 and n % block_n == 0, (X.shape, block_d, block_n)
+    grid = (n // block_n, d // block_d)
+    out = pl.pallas_call(
+        _xt_multi_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_d, block_n), lambda nj, di: (di, nj)),
+            pl.BlockSpec((block_d, s), lambda nj, di: (di, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, s), lambda nj, di: (nj, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, s), jnp.float32),
+        interpret=interpret,
+    )(X, U)
+    return out.astype(X.dtype)
+
+
+# ---------------------------------------------------------------------------
+# multi-vector pass B:  Y = X (c .* Z)    (c-scale fused, s vectors)
+# ---------------------------------------------------------------------------
+
+def _x_cz_multi_kernel(x_ref, c_ref, z_ref, y_ref):
+    """Grid (di, nj): Y[bd, s] += X[bd, bn] @ (c .* Z)[bn, s]; nj fastest."""
+    nj = pl.program_id(1)
+
+    @pl.when(nj == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    x = x_ref[...]
+    cz = (c_ref[...] * z_ref[...]).astype(x.dtype)       # fused scale
+    y_ref[...] += jnp.dot(x, cz, preferred_element_type=jnp.float32)
+
+
+def x_cz_multi(X, c, Z, *, block_d=512, block_n=512, interpret=False):
+    """Y = X @ (c[:, None] * Z).   X: (d, n), c: (n,), Z: (n, s) -> (d, s).
+
+    c rides along as an (n, 1) column so the scale broadcasts against the
+    (bn, s) Z tile inside the kernel — one multiply fused into pass B, same
+    as the single-vector ``x_cz``."""
+    d, n = X.shape
+    s = Z.shape[1]
+    assert Z.shape[0] == n and c.shape == (n,), (X.shape, c.shape, Z.shape)
+    assert d % block_d == 0 and n % block_n == 0, (X.shape, block_d, block_n)
+    grid = (d // block_d, n // block_n)
+    out = pl.pallas_call(
+        _x_cz_multi_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_d, block_n), lambda di, nj: (di, nj)),
+            pl.BlockSpec((block_n, 1), lambda di, nj: (nj, 0)),
+            pl.BlockSpec((block_n, s), lambda di, nj: (nj, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_d, s), lambda di, nj: (di, 0)),
+        out_shape=jax.ShapeDtypeStruct((d, s), jnp.float32),
+        interpret=interpret,
+    )(X, c.reshape(n, 1), Z)
+    return out.astype(X.dtype)

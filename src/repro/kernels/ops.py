@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from repro.kernels import glm_hvp as _hvp
 from repro.kernels import flash_attention as _fa
 from repro.kernels import ref as _ref
+from repro.utils.padding import pad_to_multiple as _pad_axis
 
 
 def _mode() -> str:
@@ -28,15 +29,6 @@ def _mode() -> str:
     if m == "auto":
         return "native" if jax.default_backend() == "tpu" else "interpret"
     return m
-
-
-def _pad_axis(a, axis, mult):
-    pad = (-a.shape[axis]) % mult
-    if pad == 0:
-        return a, 0
-    widths = [(0, 0)] * a.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(a, widths), pad
 
 
 # ---------------------------------------------------------------------------
@@ -97,6 +89,70 @@ def x_cz_local(X, c, z, *, block_d=512, block_n=512, mode=None):
     y = _hvp.x_cz(Xp, cp, zp, block_d=block_d, block_n=block_n,
                   interpret=(mode == "interpret"))
     return y[:d]
+
+
+# ---------------------------------------------------------------------------
+# GLM HVP — multi-vector (s-step PCG)
+# ---------------------------------------------------------------------------
+
+LANE = 128  # TPU lane width; s-vector tiles are padded to this multiple
+
+
+def xt_multi(X, U, *, block_d=512, block_n=512, mode=None):
+    """Z = X^T U for a block of s probe vectors.  X: (d, n), U: (d, s).
+
+    One X-tile read serves all s columns — the s-step basis HVP costs one
+    streaming pass over X instead of s (see DESIGN.md §2)."""
+    mode = mode or _mode()
+    if mode == "ref":
+        return _ref.ref_xt_multi(X, U)
+    d, n = X.shape
+    s = U.shape[1]
+    Xp, _ = _pad_axis(X, 0, block_d)
+    Xp, _ = _pad_axis(Xp, 1, block_n)
+    Up, _ = _pad_axis(U, 0, block_d)
+    Up, _ = _pad_axis(Up, 1, LANE)
+    Z = _hvp.xt_multi(Xp, Up, block_d=block_d, block_n=block_n,
+                      interpret=(mode == "interpret"))
+    return Z[:n, :s]
+
+
+def x_cz_multi(X, c, Z, *, block_d=512, block_n=512, mode=None):
+    """Y = X @ (c .* Z) for a block of s vectors (c-scale fused in-kernel).
+
+    Distributed use mirrors the single-vector pair: pass A's (n, s) result
+    is psum'd across shards (the ONE vector round of an s-step DiSCO-F
+    iteration block), then pass B runs on the local rows."""
+    mode = mode or _mode()
+    if mode == "ref":
+        return _ref.ref_x_cz_multi(X, c, Z)
+    d, n = X.shape
+    s = Z.shape[1]
+    Xp, _ = _pad_axis(X, 0, block_d)
+    Xp, _ = _pad_axis(Xp, 1, block_n)
+    cp, _ = _pad_axis(c, 0, block_n)
+    Zp, _ = _pad_axis(Z, 0, block_n)
+    Zp, _ = _pad_axis(Zp, 1, LANE)
+    Y = _hvp.x_cz_multi(Xp, cp, Zp, block_d=block_d, block_n=block_n,
+                        interpret=(mode == "interpret"))
+    return Y[:d, :s]
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "block_n", "mode"))
+def _glm_hvp_multi_impl(X, c, U, lam, *, block_d, block_n, mode):
+    if mode == "ref":
+        return _ref.ref_glm_hvp_multi(X, c, U, lam)
+    n = X.shape[1]
+    Z = xt_multi(X, U, block_d=block_d, block_n=block_n, mode=mode)
+    Y = x_cz_multi(X, c, Z, block_d=block_d, block_n=block_n, mode=mode)
+    return Y / n + lam * U
+
+
+def glm_hvp_multi(X, c, U, lam, *, block_d=512, block_n=512, mode=None):
+    """Batched H U = X diag(c) X^T U / n + lam U over s probe vectors."""
+    mode = mode or _mode()
+    return _glm_hvp_multi_impl(X, c, U, jnp.asarray(lam, X.dtype),
+                               block_d=block_d, block_n=block_n, mode=mode)
 
 
 # ---------------------------------------------------------------------------

@@ -32,6 +32,22 @@ def ref_x_cz(X, cz):
     return X @ cz
 
 
+def ref_xt_multi(X, U):
+    """Z = X^T U   (multi-vector pass A: s probe vectors at once)."""
+    return X.T @ U
+
+
+def ref_x_cz_multi(X, c, Z):
+    """Y = X @ (c .* Z)  (multi-vector pass B with the c-scale fused)."""
+    return X @ (c[:, None] * Z)
+
+
+def ref_glm_hvp_multi(X, c, U, lam, n_global=None):
+    """Batched GLM HVP  H U = X diag(c) X^T U / n + lam * U  (U: (d, s))."""
+    n = X.shape[1] if n_global is None else n_global
+    return ref_x_cz_multi(X, c, ref_xt_multi(X, U)) / n + lam * U
+
+
 def ref_attention(q, k, v, causal=True, window=0, scale=None):
     """Masked multi-head attention oracle.
 

@@ -37,6 +37,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core.losses import get_loss
 from repro.core.pcg import PCGResult, pcg_features, pcg_samples
 from repro.launch.dryrun import collective_stats
+from repro.utils.compat import shard_map
 
 D_GLOBAL = 1 << 20          # 1,048,576 features
 N_GLOBAL = 1 << 18          # 262,144 samples
@@ -72,7 +73,7 @@ def build_step(partition: str, mesh: Mesh, loss_name="logistic",
                                axis_name=axis, precond="woodbury")
             return w_loc - res.v / (1.0 + res.delta)
 
-        fn = jax.shard_map(
+        fn = shard_map(
             step, mesh=mesh,
             in_specs=(P(axis, None), P(axis), P(), P()),
             out_specs=P(axis), check_vma=False)
@@ -96,7 +97,7 @@ def build_step(partition: str, mesh: Mesh, loss_name="logistic",
                               axis_name=axis, precond="woodbury")
             return w - res.v / (1.0 + res.delta)
 
-        fn = jax.shard_map(
+        fn = shard_map(
             step, mesh=mesh,
             in_specs=(P(None, axis), P(axis), P(), P(), P()),
             out_specs=P(), check_vma=False)

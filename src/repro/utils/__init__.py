@@ -1,0 +1,5 @@
+"""Small shared utilities (padding, version compatibility)."""
+from repro.utils.compat import pcast, shard_map
+from repro.utils.padding import pad_to_multiple
+
+__all__ = ["pad_to_multiple", "pcast", "shard_map"]

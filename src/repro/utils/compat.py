@@ -1,0 +1,40 @@
+"""JAX version compatibility.
+
+The solver targets the modern ``jax.shard_map`` API (``check_vma`` kwarg).
+Older releases (<= 0.4.x) only ship ``jax.experimental.shard_map.shard_map``
+whose equivalent kwarg is ``check_rep``. Every call site imports
+``shard_map`` from here so the rest of the codebase is version-agnostic.
+"""
+from __future__ import annotations
+
+import jax
+from jax import lax
+
+if hasattr(lax, "pcast"):
+    pcast = lax.pcast
+else:
+    def pcast(x, axis_name, to=None):
+        """No-op stand-in: without the varying-manifest-axes system every
+        value inside shard_map is already device-varying."""
+        del axis_name, to
+        return x
+
+def cost_analysis_dict(compiled):
+    """``Compiled.cost_analysis()`` returns a dict on modern JAX and a
+    one-element list of dicts on 0.4.x — normalize to a dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
+
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kwargs):
+        if check_vma is not None:
+            kwargs["check_rep"] = check_vma
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, **kwargs)

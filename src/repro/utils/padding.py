@@ -1,0 +1,27 @@
+"""The one pad-to-block-multiple helper shared across the codebase.
+
+Previously duplicated as ``_pad_to_multiple`` (core/disco.py, host-side
+numpy) and ``_pad_axis`` (kernels/ops.py, traced jnp). One implementation
+handles both: jax arrays/tracers are padded with ``jnp.pad`` so the op stays
+inside the jit trace, everything else goes through ``np.pad`` on the host.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def pad_to_multiple(a, axis: int, multiple: int):
+    """Zero-pad ``a`` along ``axis`` up to the next multiple of ``multiple``.
+
+    Returns ``(padded, pad)`` where ``pad`` is the number of zeros appended
+    (0 when the size is already aligned — the input is returned unchanged).
+    """
+    pad = (-a.shape[axis]) % multiple
+    if pad == 0:
+        return a, 0
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    xp = jnp if isinstance(a, jax.Array) else np
+    return xp.pad(a, widths), pad

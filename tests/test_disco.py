@@ -1,4 +1,9 @@
 """DiSCO end-to-end (Algorithm 1): convergence, S/F equivalence, ledger."""
+import os
+import subprocess
+import sys
+import textwrap
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -122,6 +127,101 @@ def test_comm_ledger_formulas():
     # DiSCO-F PCG iteration: 1 reduceAll n-vector + 2 scalar reduceAlls
     r, fl, spmd = comm.disco_f_pcg_cost(n=50, iters=3)
     assert r == 3 and fl == 3 * (50 + 2)
+
+
+_MASK_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+    assert len(jax.devices()) == 4
+    from repro.core.disco import _shard_subsample_mask
+    from repro.utils.compat import shard_map
+
+    mesh = jax.make_mesh((4,), ("data",))
+
+    def body(key):
+        m = _shard_subsample_mask(key, 0.5, (64,), "data")
+        return m.astype(jnp.float32)
+
+    fn = jax.jit(shard_map(body, mesh=mesh, in_specs=(P(),),
+                           out_specs=P("data"), check_vma=False))
+    masks = np.asarray(fn(jax.random.PRNGKey(0))).reshape(4, 64)
+    # regression (was: every shard drew the same mask): shards must differ
+    for i in range(4):
+        for j in range(i + 1, 4):
+            assert not np.array_equal(masks[i], masks[j]), (i, j)
+    # and each shard's draw is a plausible Bernoulli(0.5)
+    assert 0.2 < masks.mean() < 0.8
+    print("MASKS_DIFFER_PASS")
+""")
+
+
+@pytest.mark.slow
+def test_hessian_subsample_masks_differ_per_shard():
+    """Regression for the duplicated Bernoulli draw in the samples branch:
+    the kept draw must fold the shard index into the key so shards drop
+    *different* sample subsets."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", _MASK_SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=300)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "MASKS_DIFFER_PASS" in r.stdout
+
+
+_SSTEP_4DEV_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import numpy as np
+    import jax
+    assert len(jax.devices()) == 4
+    from repro.core import DiscoConfig, DiscoSolver
+    from repro.data.synthetic import make_glm_data
+
+    X, y, _ = make_glm_data(d=64, n=320, seed=0)
+    kw = dict(loss="logistic", lam=1e-3, tau=64, max_outer=6, grad_tol=0.0)
+    for partition, axis in (("features", "model"), ("samples", "data")):
+        mesh4 = jax.make_mesh((4,), (axis,))
+        r1 = DiscoSolver(X, y, DiscoConfig(partition=partition, **kw),
+                         mesh=mesh4).fit()
+        rs = DiscoSolver(X, y, DiscoConfig(partition=partition,
+                                           pcg_block_s=4, **kw),
+                         mesh=mesh4).fit()
+        # the 4-shard basis operator is approximate -> compare the Newton
+        # trajectory endpoint, not the PCG path
+        np.testing.assert_allclose(rs.w, r1.w, atol=5e-4, rtol=1e-3)
+        if partition == "features":
+            # block-diagonal basis operator carries real curvature: fewer
+            # rounds even with the approximate 4-shard basis
+            assert rs.ledger.rounds < r1.ledger.rounds, \
+                (partition, r1.ledger.rounds, rs.ledger.rounds)
+        else:
+            # DiSCO-S + Woodbury: the tau-sample basis operator adds little
+            # beyond the preconditioner, so s-step degrades gracefully to
+            # ~locally-optimal CG — never meaningfully worse (DESIGN.md §2.5)
+            assert rs.ledger.rounds <= 1.2 * r1.ledger.rounds, \
+                (partition, r1.ledger.rounds, rs.ledger.rounds)
+        print(partition, "OK", r1.ledger.rounds, rs.ledger.rounds)
+    print("SSTEP_4DEV_PASS")
+""")
+
+
+@pytest.mark.slow
+def test_sstep_4device_matches_classic():
+    """s-step PCG on a real 4-shard mesh (approximate zero-comm basis
+    operators) still reaches the classic trajectory's solution with fewer
+    ledger rounds."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", _SSTEP_4DEV_SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=540)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "SSTEP_4DEV_PASS" in r.stdout
 
 
 def test_pallas_kernel_path_matches_jnp(glm_data):

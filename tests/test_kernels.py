@@ -7,6 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional test dep
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import flash_attention, glm_hvp, xt_u

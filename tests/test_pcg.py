@@ -8,6 +8,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core.glm import GLMProblem
 from repro.core.losses import get_loss
 from repro.core.pcg import PCGResult, pcg_features, pcg_samples
+from repro.utils.compat import shard_map
 
 
 def _problem(rng, d=40, n=200, loss="logistic", lam=1e-2):
@@ -27,8 +28,8 @@ def _dense_newton_direction(prob, w):
 
 def _run_single_device(fn, in_specs, out_specs, axis, *args):
     mesh = jax.make_mesh((1,), (axis,))
-    return jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
-                                 out_specs=out_specs))(*args)
+    return jax.jit(shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False))(*args)
 
 
 @pytest.mark.parametrize("loss", ["quadratic", "logistic"])

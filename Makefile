@@ -2,16 +2,22 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast bench bench-sstep
+.PHONY: test test-fast bench bench-sstep bench-loadbalance docs-check
 
-test:            ## tier-1 verify: the full suite, stop on first failure
+test: docs-check ## tier-1 verify: docs gate + full suite, stop on first failure
 	$(PY) -m pytest -x -q
 
 test-fast:       ## skip the slow multi-device subprocess tests
 	$(PY) -m pytest -x -q -m "not slow"
 
-bench:           ## full benchmark suite (paper figures + s-step)
+docs-check:      ## fail on broken intra-repo doc links / missing public docstrings
+	$(PY) tools/docs_check.py
+
+bench:           ## full benchmark suite (paper figures + s-step + load balance)
 	$(PY) -m benchmarks.run
 
 bench-sstep:     ## s-step communication-avoiding PCG bench only
 	$(PY) -m benchmarks.bench_sstep
+
+bench-loadbalance: ## LPT vs equal-width sparse partitioning bench only
+	$(PY) -m benchmarks.bench_loadbalance

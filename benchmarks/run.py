@@ -18,7 +18,7 @@ def main(argv=None):
                     help="fig4/fig5/table4/woodbury only (no fig3 sweep)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig3,fig4,fig5,table4,"
-                         "sstep,woodbury,amdahl,roofline")
+                         "sstep,loadbalance,woodbury,amdahl,roofline")
     args = ap.parse_args(argv)
 
     selected = set(args.only.split(",")) if args.only else None
@@ -27,7 +27,8 @@ def main(argv=None):
         if selected is not None:
             return name in selected
         if args.quick:
-            return name not in ("fig3", "sstep")  # both run many full fits
+            # these run many full fits (or a forced-8-device subprocess)
+            return name not in ("fig3", "sstep", "loadbalance")
         return True
 
     t0 = time.perf_counter()
@@ -42,6 +43,10 @@ def main(argv=None):
     if want("sstep"):
         from benchmarks import bench_sstep
         bench_sstep.main()
+        print()
+    if want("loadbalance"):
+        from benchmarks import bench_loadbalance
+        bench_loadbalance.main()
         print()
     if want("woodbury"):
         from benchmarks import bench_woodbury

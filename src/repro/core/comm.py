@@ -22,6 +22,8 @@ from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
+
 BYTES_PER_FLOAT = 4  # f32 throughout
 
 
@@ -52,22 +54,29 @@ def disco_s_outer_cost(d: int) -> tuple[int, int, int]:
 
 
 def disco_s_pcg_cost(d: int, iters: int) -> tuple[int, int, int]:
+    """(rounds, floats, spmd) for ``iters`` classic DiSCO-S PCG
+    iterations: per iteration one d-vector broadcast of the probe u_t
+    plus one d-vector reduceAll of H u_t (a single SPMD all-reduce)."""
     return 2 * iters, 2 * d * iters, 1 * iters
 
 
 def disco_f_outer_cost(n: int, d: int, m: int) -> tuple[int, int, int]:
-    # margins reduceAll (n) + the final "Reduce an R^{d_j} vector" (Alg 3
-    # line 12); the result stays sharded so the reduce moves d floats total.
-    return 2, n + d, 1  # SPMD: margins psum only; v never leaves its shard
-    # (the d-float reduce is counted in floats for MPI fidelity)
+    """(rounds, floats, spmd) for one DiSCO-F outer iteration excluding
+    PCG: the margins reduceAll (n floats) + the final "Reduce an R^{d_j}
+    vector" of Algorithm 3 line 12 (d floats total — the result stays
+    sharded). Under SPMD only the margins psum materializes; v never
+    leaves its shard (the d-float reduce is counted in ``floats`` for
+    MPI fidelity)."""
+    return 2, n + d, 1
 
 
 def disco_f_pcg_cost(n: int, iters: int) -> tuple[int, int, int]:
-    # one n-vector reduceAll per PCG iteration; the two scalar reduceAlls
-    # are the paper's "thin red arrows — a few scalars only" (Fig 2) and are
-    # counted in floats and spmd collectives but not as vector *rounds* —
-    # this is the accounting under which "DiSCO-F uses half the rounds of
-    # DiSCO-S" (§5.2) holds.
+    """(rounds, floats, spmd) for ``iters`` classic DiSCO-F PCG
+    iterations: one n-vector reduceAll each, plus two scalar reduceAlls
+    — the paper's "thin red arrows, a few scalars only" (Fig 2), counted
+    in floats and SPMD collectives but not as vector *rounds*. This is
+    the accounting under which "DiSCO-F uses half the rounds of DiSCO-S"
+    (§5.2) holds."""
     return 1 * iters, (n + 2) * iters, 3 * iters
 
 
@@ -96,8 +105,84 @@ def disco_f_sstep_cost(n: int, s: int, rounds: int) -> tuple[int, int, int]:
 
 
 def dane_iter_cost(d: int) -> tuple[int, int, int]:
+    """(rounds, floats, spmd) for one DANE iteration: two d-vector
+    reduceAlls (gradient, then the averaged local solution)."""
     return 2, 2 * d, 2
 
 
 def cocoa_iter_cost(d: int) -> tuple[int, int, int]:
+    """(rounds, floats, spmd) for one CoCoA+ outer iteration: a single
+    d-vector reduceAll of the aggregated local updates."""
     return 1, d, 1
+
+
+# ---------------------------------------------------------------------------
+# load-balance extension (paper title contribution; docs/partitioning.md)
+#
+# Every collective above is a *barrier*: the mesh advances at the pace of
+# the slowest shard. With sparse data the per-shard work between barriers
+# is proportional to that shard's nonzeros, so the compute term of any
+# per-iteration time estimate must be gated by max_shard_nnz — not the
+# mean. ``max/mean`` is exactly the imbalance metric the LPT partitioner
+# minimizes (repro.data.partition).
+# ---------------------------------------------------------------------------
+
+def sparse_hvp_flops(nnz: int) -> int:
+    """Flops of one sparse HVP application: two passes over the nonzeros
+    (X^T u then X (c.*z)), one multiply-add each -> 4 flops/nnz."""
+    return 4 * nnz
+
+
+def straggler_factor(shard_nnz) -> float:
+    """max_shard_nnz / mean_shard_nnz: the factor by which barrier
+    collectives stretch the compute phase of a skewed partition (1.0 is a
+    perfect balance). Identical to
+    :func:`repro.data.partition.imbalance`; duplicated arithmetic here so
+    the cost model has no data-layer dependency."""
+    shard_nnz = np.asarray(shard_nnz, np.float64)
+    mean = shard_nnz.mean()
+    return float(shard_nnz.max() / mean) if mean > 0 else 1.0
+
+
+def disco_sparse_iter_time(shard_nnz, pcg_iters: int, partition: str,
+                           n: int, d: int, m: int, s: int = 1, *,
+                           flops_per_sec: float = 5e11,
+                           bytes_per_sec: float = 1e10,
+                           latency_s: float = 5e-6) -> dict:
+    """Modeled seconds for ONE Newton iteration on a sparse partition.
+
+    compute: (pcg_iters + 1) HVP applications (PCG loop + the margins/
+    gradient pass), each costing :func:`sparse_hvp_flops` of the
+    *heaviest* shard — the straggler gates every barrier.
+    comm: the paper-style (rounds, floats) of the matching cost function
+    above, charged ``latency_s`` per round plus wire time.
+
+    Returns a dict with ``compute_s``, ``comm_s``, ``total_s`` and
+    ``straggler`` so benchmarks can attribute the win of LPT balancing
+    (``benchmarks/bench_loadbalance.py``).
+    """
+    shard_nnz = np.asarray(shard_nnz, np.float64)
+    max_nnz = float(shard_nnz.max()) if len(shard_nnz) else 0.0
+
+    if partition == "features":
+        r1, f1, _ = disco_f_outer_cost(n, d, m)
+        if s > 1:
+            r2, f2, _ = disco_f_sstep_cost(n, s, pcg_iters)
+        else:
+            r2, f2, _ = disco_f_pcg_cost(n, pcg_iters)
+    elif partition == "samples":
+        r1, f1, _ = disco_s_outer_cost(d)
+        if s > 1:
+            r2, f2, _ = disco_s_sstep_cost(d, s, pcg_iters)
+        else:
+            r2, f2, _ = disco_s_pcg_cost(d, pcg_iters)
+    else:
+        raise ValueError(f"unknown partition {partition!r}")
+
+    hvp_apps = pcg_iters * max(s, 1) + 1
+    compute_s = hvp_apps * sparse_hvp_flops(int(max_nnz)) / flops_per_sec
+    comm_s = (r1 + r2) * latency_s \
+        + (f1 + f2) * BYTES_PER_FLOAT / bytes_per_sec
+    return dict(compute_s=compute_s, comm_s=comm_s,
+                total_s=compute_s + comm_s,
+                straggler=straggler_factor(shard_nnz))

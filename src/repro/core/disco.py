@@ -28,12 +28,53 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core import comm
 from repro.core.losses import get_loss
 from repro.core.pcg import pcg_features, pcg_samples
+from repro.data.partition import Partition, make_partition
+from repro.data.sparse import (CSRMatrix, EllPair, build_shard_ell_pairs,
+                               shard_csrs_from_partition)
 from repro.utils.compat import shard_map
 from repro.utils.padding import pad_to_multiple
 
 
 @dataclasses.dataclass(frozen=True)
 class DiscoConfig:
+    """Hyperparameters of one DiSCO solve (paper Algorithms 1-3).
+
+    Attributes:
+        loss: loss name from :mod:`repro.core.losses`
+            ('logistic' | 'quadratic' | 'squared_hinge').
+        lam: L2 regularization weight of problem (P).
+        mu: preconditioner damping added to lam (paper uses 1e-2).
+        tau: preconditioner sample count — the "master's first tau
+            samples" of the paper (~100); clamped to n.
+        partition: 'features' (DiSCO-F, Algorithm 3, mesh axis ``model``)
+            or 'samples' (DiSCO-S, Algorithm 2, mesh axis ``data``). See
+            docs/partitioning.md for how to choose.
+        precond: 'woodbury' (closed form, paper §4), 'sag' (original
+            DiSCO's iterative master-side solve; samples partition only),
+            or 'none' (plain CG).
+        max_outer: Newton (outer) iteration cap.
+        max_pcg: PCG iteration cap (s-step mode: *rounds* cap).
+        pcg_rel_tol: inexactness eps_k = pcg_rel_tol * ||grad_k||.
+        grad_tol: outer-loop stop when ||grad|| falls below this.
+        hessian_subsample: fraction of samples entering each H u
+            (paper §5.4); 1.0 disables subsampling.
+        sag_epochs: inner epochs of the 'sag' preconditioner baseline.
+        use_kernel: route dense HVPs through the Pallas kernels
+            (kernels/glm_hvp.py). Ignored for sparse inputs — the
+            blocked-ELL ops always dispatch by ``REPRO_KERNEL_MODE``.
+        pcg_block_s: s-step (communication-avoiding) PCG: Krylov
+            dimensions advanced per communication round (DESIGN.md §2);
+            1 = classic PCG.
+        partition_strategy: sparse inputs only — 'lpt' balances per-shard
+            *nonzeros* with the capacity-constrained LPT greedy
+            (docs/partitioning.md), 'width' is the naive equal-width
+            baseline. Dense inputs always slice equal-width.
+        ell_block_d: blocked-ELL tile rows (feature axis) for sparse
+            inputs; TPU-native kernels want multiples of 8 (128 ideal).
+        ell_block_n: blocked-ELL tile columns (sample axis).
+        seed: PRNG seed (Hessian subsampling draws).
+    """
+
     loss: str = "logistic"
     lam: float = 1e-4
     mu: float = 1e-2                # preconditioner damping (paper uses 1e-2)
@@ -48,22 +89,43 @@ class DiscoConfig:
     sag_epochs: int = 5             # inner epochs for the 'sag' baseline
     use_kernel: bool = False        # Pallas glm_hvp in the PCG hot path
     pcg_block_s: int = 1            # s-step PCG: Krylov vectors per comm round
+    partition_strategy: str = "lpt"  # sparse: 'lpt' (nnz-balanced) | 'width'
+    ell_block_d: int = 128          # sparse tile rows (feature axis)
+    ell_block_n: int = 128          # sparse tile cols (sample axis)
     seed: int = 0
 
 
 @dataclasses.dataclass
 class DiscoResult:
+    """Outcome of :meth:`DiscoSolver.fit`.
+
+    Attributes:
+        w: (d,) solution in the *original* feature order (any internal
+            load-balancing permutation and padding is undone).
+        history: per-outer-iteration stats dicts (grad_norm, f,
+            pcg_iters, delta, pcg_r_norm, comm_rounds_cum, ...).
+        ledger: analytic communication totals (:class:`comm.CommLedger`).
+        converged: True iff ||grad|| reached ``cfg.grad_tol``.
+        partition_info: sparse solves only — the load-balance summary of
+            :meth:`repro.data.partition.Partition.stats`, including the
+            ``imbalance`` metric (max_shard_nnz / mean_shard_nnz) the
+            paper's load-balancing contribution targets; None for dense.
+    """
+
     w: np.ndarray
     history: list[dict[str, Any]]
     ledger: comm.CommLedger
     converged: bool
+    partition_info: dict[str, Any] | None = None
 
     @property
     def grad_norms(self) -> np.ndarray:
+        """(outer_iters,) gradient norms, one per outer iteration."""
         return np.array([h["grad_norm"] for h in self.history])
 
     @property
     def comm_rounds(self) -> np.ndarray:
+        """(outer_iters,) cumulative paper-style communication rounds."""
         return np.array([h["comm_rounds_cum"] for h in self.history])
 
 
@@ -83,12 +145,32 @@ def _shard_subsample_mask(key, frac, shape, axis_name):
 
 
 class DiscoSolver:
-    """Distributed inexact damped Newton for problem (P)."""
+    """Distributed inexact damped Newton for problem (P).
+
+    Accepts the data matrix in the repo's feature-major ``(d, n)``
+    convention (rows are features, columns are samples — see
+    docs/architecture.md#shape-conventions) either **dense** (any array)
+    or **sparse** (:class:`repro.data.sparse.CSRMatrix`). Sparse inputs
+    additionally run the nnz-aware load-balanced partitioner
+    (``cfg.partition_strategy``, docs/partitioning.md) and the blocked-ELL
+    Pallas HVP kernels; the resulting shard-balance metrics are reported
+    in ``DiscoResult.partition_info``.
+
+    Args:
+        X: (d, n) dense array or CSRMatrix.
+        y: (n,) labels (+-1 for classification losses).
+        cfg: solver hyperparameters.
+        mesh: optional 1-axis jax mesh (axis ``model`` for DiSCO-F,
+            ``data`` for DiSCO-S); defaults to all local devices.
+    """
 
     def __init__(self, X, y, cfg: DiscoConfig, mesh: Mesh | None = None):
-        X = np.asarray(X)
+        self._sparse = isinstance(X, CSRMatrix)
+        if not self._sparse:
+            X = np.asarray(X)
+            assert X.ndim == 2, "X must be (d, n)"
         y = np.asarray(y)
-        assert X.ndim == 2 and y.shape == (X.shape[1],), "X must be (d, n)"
+        assert y.shape == (X.shape[1],), "X must be (d, n), y (n,)"
         self.cfg = cfg
         self.loss = get_loss(cfg.loss)
         self.d, self.n = X.shape
@@ -98,7 +180,16 @@ class DiscoSolver:
         self.axis = axis
         self.mesh = mesh if mesh is not None else _single_axis_mesh(axis)
         self.m = self.mesh.shape[axis]
+        self._part: Partition | None = None
 
+        if self._sparse:
+            self._init_sparse(X, y)
+        else:
+            self._init_dense(X, y)
+        self._step = self._build_step()
+
+    def _init_dense(self, X, y):
+        cfg, axis = self.cfg, self.axis
         # preconditioner samples: the first tau columns ("master's" samples)
         self.tau_idx = np.arange(self.tau)
         X_tau = X[:, : self.tau].copy()
@@ -137,10 +228,89 @@ class DiscoSolver:
         else:
             raise ValueError(f"unknown partition {cfg.partition!r}")
 
-        self._step = self._build_step()
+    def _init_sparse(self, X: CSRMatrix, y):
+        """Partition (load-balanced), tile, and shard a sparse matrix.
+
+        The chosen axis is permuted by the nnz-aware partitioner, each
+        shard's local matrix is laid out as a forward + transposed
+        blocked-ELL pair (data/sparse.py), and the tau preconditioner
+        samples are materialized as a small dense slab (the ELL layout
+        cannot be column-sliced on device).
+        """
+        cfg, axis, m = self.cfg, self.axis, self.m
+        br, bc = cfg.ell_block_d, cfg.ell_block_n
+        d, n = self.d, self.n
+        dtype = X.dtype
+
+        # preconditioner samples: the first tau *original* columns
+        X_tau = X.take_cols_dense(np.arange(self.tau))          # (d, tau)
+        y_tau = y[: self.tau].copy()
+        rep = NamedSharding(self.mesh, P())
+
+        if cfg.partition == "features":
+            part = make_partition(X, "features", m,
+                                  cfg.partition_strategy, pad_multiple=br)
+            shard_csrs = shard_csrs_from_partition(X, part, "features")
+            data, cols, dataT, colsT = build_shard_ell_pairs(
+                shard_csrs, br, bc)
+            self.d_padded = len(part.perm)
+            self.n_padded = dataT.shape[1] * bc
+            y_p = np.pad(y, (0, self.n_padded - n))
+            smask = np.zeros(self.n_padded, dtype)
+            smask[:n] = 1.0
+            X_tau_p = np.zeros((self.d_padded, self.tau), dtype)
+            valid = part.perm < d
+            X_tau_p[valid] = X_tau[part.perm[valid]]
+
+            es = NamedSharding(self.mesh, P(axis, None, None, None, None))
+            cs = NamedSharding(self.mesh, P(axis, None))
+            self.ell_data = jax.device_put(jnp.asarray(data), es)
+            self.ell_cols = jax.device_put(jnp.asarray(cols), cs)
+            self.ell_dataT = jax.device_put(jnp.asarray(dataT), es)
+            self.ell_colsT = jax.device_put(jnp.asarray(colsT), cs)
+            self.X_tau = jax.device_put(jnp.asarray(X_tau_p),
+                                        NamedSharding(self.mesh,
+                                                      P(axis, None)))
+            self.y = jax.device_put(jnp.asarray(y_p), rep)
+            self.y_tau = jax.device_put(jnp.asarray(y_tau), rep)
+            self.smask = jax.device_put(jnp.asarray(smask), rep)
+            self._w_sharding = NamedSharding(self.mesh, P(axis))
+            self._w_shape = (self.d_padded,)
+        elif cfg.partition == "samples":
+            part = make_partition(X, "samples", m,
+                                  cfg.partition_strategy, pad_multiple=bc)
+            shard_csrs = shard_csrs_from_partition(X, part, "samples")
+            data, cols, dataT, colsT = build_shard_ell_pairs(
+                shard_csrs, br, bc)
+            self.n_padded = len(part.perm)
+            self.d_padded = data.shape[1] * br          # nrb * br
+            ext = lambda v: np.pad(v, (0, self.n_padded - n))
+            y_p = ext(y)[part.perm]
+            wts = ext(np.ones(n, dtype))[part.perm]
+            X_tau_p = np.zeros((self.d_padded, self.tau), dtype)
+            X_tau_p[:d] = X_tau
+
+            es = NamedSharding(self.mesh, P(axis, None, None, None, None))
+            cs = NamedSharding(self.mesh, P(axis, None))
+            ss = NamedSharding(self.mesh, P(axis))
+            self.ell_data = jax.device_put(jnp.asarray(data), es)
+            self.ell_cols = jax.device_put(jnp.asarray(cols), cs)
+            self.ell_dataT = jax.device_put(jnp.asarray(dataT), es)
+            self.ell_colsT = jax.device_put(jnp.asarray(colsT), cs)
+            self.y = jax.device_put(jnp.asarray(y_p), ss)
+            self.weights = jax.device_put(jnp.asarray(wts), ss)
+            self.X_tau = jax.device_put(jnp.asarray(X_tau_p), rep)
+            self.y_tau = jax.device_put(jnp.asarray(y_tau), rep)
+            self._w_sharding = rep
+            self._w_shape = (self.d_padded,)
+        else:
+            raise ValueError(f"unknown partition {cfg.partition!r}")
+        self._part = part
 
     # ------------------------------------------------------------------
     def _build_step(self):
+        if self._sparse:
+            return self._build_step_sparse()
         cfg, loss, axis = self.cfg, self.loss, self.axis
         n, tau = self.n, self.tau
         frac = cfg.hessian_subsample
@@ -224,6 +394,111 @@ class DiscoSolver:
         return jax.jit(step)
 
     # ------------------------------------------------------------------
+    def _build_step_sparse(self):
+        """Sparse twin of ``_build_step``: identical algorithm, with every
+        X product routed through the blocked-ELL kernel pair. The ELL
+        arrays enter ``shard_map`` sharded on their leading (shard) axis
+        and are re-wrapped as an :class:`EllPair` per shard."""
+        cfg, loss, axis = self.cfg, self.loss, self.axis
+        n, tau = self.n, self.tau
+        frac = cfg.hessian_subsample
+        from repro.kernels import ops as kops
+
+        if cfg.partition == "features":
+            def step_local(ed, ec, edT, ecT, X_tau_loc, y, y_tau, smask,
+                           w_loc, key):
+                ell = EllPair(ed[0], ec[0], edT[0], ecT[0])
+                margins = lax.psum(
+                    kops.ell_matvec(ell.dataT, ell.colsT, w_loc), axis)
+                d1 = loss.d1(margins, y) * smask
+                c = loss.d2(margins, y) * smask
+                g_loc = kops.ell_matvec(ell.data, ell.cols, d1) / n \
+                    + cfg.lam * w_loc
+                gnorm = jnp.sqrt(lax.psum(jnp.vdot(g_loc, g_loc), axis))
+                fval = jnp.sum(loss.value(margins, y) * smask) / n \
+                    + 0.5 * cfg.lam * lax.psum(jnp.vdot(w_loc, w_loc), axis)
+
+                if frac < 1.0:  # Hessian subsampling, paper §5.4
+                    mask = jax.random.bernoulli(key, frac, margins.shape)
+                    c_eff = c * mask / frac
+                else:
+                    c_eff = c
+                coeffs_tau = loss.d2(margins[:tau], y_tau)
+
+                eps = cfg.pcg_rel_tol * gnorm
+                res = pcg_features(
+                    ell, c_eff, n, cfg.lam, g_loc, eps, cfg.max_pcg,
+                    coeffs_tau=coeffs_tau, mu=cfg.mu, axis_name=axis,
+                    precond=cfg.precond, block_s=cfg.pcg_block_s,
+                    X_tau_loc=X_tau_loc)
+                w_new = w_loc - res.v / (1.0 + res.delta)
+                stats = dict(grad_norm=gnorm, f=fval, pcg_iters=res.iters,
+                             delta=res.delta, pcg_r_norm=res.r_norm)
+                return w_new, stats
+
+            fn = shard_map(
+                step_local, mesh=self.mesh,
+                in_specs=(P(axis, None, None, None, None), P(axis, None),
+                          P(axis, None, None, None, None), P(axis, None),
+                          P(axis, None), P(), P(), P(), P(axis), P()),
+                out_specs=(P(axis), P()),
+                check_vma=False)  # pallas_call outputs carry no vma info
+
+            def step(w, key):
+                return fn(self.ell_data, self.ell_cols, self.ell_dataT,
+                          self.ell_colsT, self.X_tau, self.y, self.y_tau,
+                          self.smask, w, key)
+
+        else:  # samples
+            def step_local(ed, ec, edT, ecT, y_loc, wts_loc, X_tau, y_tau,
+                           w, key):
+                ell = EllPair(ed[0], ec[0], edT[0], ecT[0])
+                margins = kops.ell_matvec(ell.dataT, ell.colsT, w)
+                d1 = loss.d1(margins, y_loc) * wts_loc
+                c = loss.d2(margins, y_loc) * wts_loc
+                g = lax.psum(kops.ell_matvec(ell.data, ell.cols, d1),
+                             axis) / n + cfg.lam * w
+                gnorm = jnp.sqrt(jnp.vdot(g, g))
+                fval = lax.psum(jnp.sum(loss.value(margins, y_loc)
+                                        * wts_loc), axis) / n \
+                    + 0.5 * cfg.lam * jnp.vdot(w, w)
+
+                if frac < 1.0:
+                    mask = _shard_subsample_mask(key, frac, margins.shape,
+                                                 axis)
+                    c_eff = c * mask / frac
+                else:
+                    c_eff = c
+                coeffs_tau = loss.d2(X_tau.T @ w, y_tau)
+
+                eps = cfg.pcg_rel_tol * gnorm
+                res = pcg_samples(
+                    ell, c_eff, n, cfg.lam, g, eps, cfg.max_pcg,
+                    X_tau=X_tau, coeffs_tau=coeffs_tau, mu=cfg.mu,
+                    axis_name=axis, precond=cfg.precond,
+                    sag_epochs=cfg.sag_epochs,
+                    block_s=cfg.pcg_block_s, axis_size=self.m)
+                w_new = w - res.v / (1.0 + res.delta)
+                stats = dict(grad_norm=gnorm, f=fval, pcg_iters=res.iters,
+                             delta=res.delta, pcg_r_norm=res.r_norm)
+                return w_new, stats
+
+            fn = shard_map(
+                step_local, mesh=self.mesh,
+                in_specs=(P(axis, None, None, None, None), P(axis, None),
+                          P(axis, None, None, None, None), P(axis, None),
+                          P(axis), P(axis), P(), P(), P(), P()),
+                out_specs=(P(), P()),
+                check_vma=False)  # pallas_call outputs carry no vma info
+
+            def step(w, key):
+                return fn(self.ell_data, self.ell_cols, self.ell_dataT,
+                          self.ell_colsT, self.y, self.weights, self.X_tau,
+                          self.y_tau, w, key)
+
+        return jax.jit(step)
+
+    # ------------------------------------------------------------------
     def _comm_costs(self, pcg_iters: int) -> tuple[int, int, int]:
         """``pcg_iters`` is PCG iterations for the classic path and *rounds*
         (each worth ``pcg_block_s`` iterations) for the s-step path."""
@@ -243,12 +518,21 @@ class DiscoSolver:
         return r1 + r2, f1 + f2, s1 + s2
 
     def fit(self, w0: np.ndarray | None = None) -> DiscoResult:
+        """Run the damped Newton outer loop from ``w0`` (default zeros).
+
+        ``w0`` is given — and ``DiscoResult.w`` returned — in the
+        original feature order; any internal padding and load-balancing
+        permutation is applied/undone here.
+        """
         cfg = self.cfg
+        dtype = self.ell_data.dtype if self._sparse else self.X.dtype
         if w0 is None:
-            w = jnp.zeros(self._w_shape, self.X.dtype)
+            w = jnp.zeros(self._w_shape, dtype)
         else:
-            w = jnp.asarray(np.pad(np.asarray(w0),
-                                   (0, self._w_shape[0] - len(w0))))
+            w0 = np.pad(np.asarray(w0), (0, self._w_shape[0] - len(w0)))
+            if self._sparse and cfg.partition == "features":
+                w0 = w0[self._part.perm]  # into load-balanced order
+            w = jnp.asarray(w0)
         w = jax.device_put(w, self._w_sharding)
         key = jax.random.PRNGKey(cfg.seed)
 
@@ -268,13 +552,36 @@ class DiscoSolver:
                 converged = True
                 break
 
-        w_full = np.asarray(w)[: self.d]
+        if self._sparse and cfg.partition == "features":
+            # undo the load-balancing permutation (padding slots dropped)
+            w_np = np.asarray(w)
+            w_full = np.zeros(self.d, w_np.dtype)
+            valid = self._part.perm < self.d
+            w_full[self._part.perm[valid]] = w_np[valid]
+        else:
+            w_full = np.asarray(w)[: self.d]
         return DiscoResult(w=w_full, history=history, ledger=ledger,
-                           converged=converged)
+                           converged=converged,
+                           partition_info=(self._part.stats()
+                                           if self._part else None))
 
 
 def disco_fit(X, y, cfg: DiscoConfig | None = None, mesh: Mesh | None = None,
               w0: np.ndarray | None = None) -> DiscoResult:
-    """One-call convenience wrapper."""
+    """One-call convenience wrapper: build a :class:`DiscoSolver`, fit.
+
+    Args:
+        X: (d, n) feature-major data — dense array or
+            :class:`repro.data.sparse.CSRMatrix` (the latter engages the
+            load-balanced sparse path, docs/partitioning.md).
+        y: (n,) labels.
+        cfg: solver hyperparameters (defaults: :class:`DiscoConfig`).
+        mesh: optional 1-axis mesh; defaults to all local devices.
+        w0: optional (d,) warm start in original feature order.
+
+    Returns:
+        :class:`DiscoResult` with the solution, per-iteration history,
+        communication ledger, and (sparse only) partition_info.
+    """
     cfg = cfg or DiscoConfig()
     return DiscoSolver(X, y, cfg, mesh=mesh).fit(w0)

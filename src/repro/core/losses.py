@@ -78,6 +78,8 @@ LOSSES = {l.name: l for l in (QUADRATIC, SQUARED_HINGE, LOGISTIC)}
 
 
 def get_loss(name: str) -> Loss:
+    """Look up a :class:`Loss` by name ('quadratic' | 'squared_hinge' |
+    'logistic'); raises ValueError listing the options otherwise."""
     try:
         return LOSSES[name]
     except KeyError:

@@ -48,6 +48,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.preconditioner import WoodburyPreconditioner, sag_solve
+from repro.data.sparse import EllPair
 
 
 class PCGResult(NamedTuple):
@@ -261,11 +262,20 @@ def _samples_precond(precond, X_tau, coeffs_tau, lam, mu, sag_epochs):
     raise ValueError(f"unknown precond {precond!r}")
 
 
-def _features_precond(precond, X_loc, tau_idx, coeffs_tau, lam, mu):
+def _features_precond(precond, X_loc, tau_idx, coeffs_tau, lam, mu,
+                      X_tau_loc=None):
     if precond == "woodbury":
         # block-diagonal P^{[j]}: local feature rows of the tau samples,
-        # zero communication (paper contribution 2).
-        X_tau_loc = X_loc[:, tau_idx]
+        # zero communication (paper contribution 2). Sparse callers pass
+        # the dense tau slab directly (tau ~ 100 columns; materialized
+        # once per solve by DiscoSolver).
+        if X_tau_loc is None:
+            if isinstance(X_loc, EllPair):
+                raise ValueError("sparse pcg_features needs the dense "
+                                 "X_tau_loc slab for the Woodbury "
+                                 "preconditioner (an EllPair cannot be "
+                                 "column-sliced)")
+            X_tau_loc = X_loc[:, tau_idx]
         P = WoodburyPreconditioner.build_blockdiag(X_tau_loc, coeffs_tau,
                                                    lam, mu)
         return P.apply_inv
@@ -298,8 +308,21 @@ def pcg_samples(X_loc, coeffs_loc, n_global, lam, g, eps, max_iter,
                   mesh so the s-step basis operator is the exact Hessian)
     """
     n_global = jnp.asarray(n_global, X_loc.dtype)
+    sparse = isinstance(X_loc, EllPair)
 
-    if use_kernel:
+    if sparse:
+        # blocked-ELL two-pass HVP (kernels/sparse_hvp.py): pass A streams
+        # the transposed layout, pass B the forward layout with the
+        # coefficient scale fused; the cross-device reduction stays a psum
+        # here, outside the kernel. (``use_kernel`` is moot — the ELL ops
+        # dispatch native/interpret/ref via REPRO_KERNEL_MODE.)
+        from repro.kernels import ops as kops
+
+        def hvp(u):
+            z = kops.ell_matvec(X_loc.dataT, X_loc.colsT, u)
+            y = kops.ell_matvec(X_loc.data, X_loc.cols, z, coeffs_loc)
+            return lax.psum(y, axis_name) / n_global + lam * u
+    elif use_kernel:
         # Pallas two-pass HVP (kernels/glm_hvp.py) on the local shard; the
         # cross-device reduction stays a psum here, outside the kernel.
         from repro.kernels import ops as kops
@@ -333,7 +356,14 @@ def pcg_samples(X_loc, coeffs_loc, n_global, lam, g, eps, max_iter,
     # Zero-communication basis operator: the replicated tau-sample Hessian
     # estimate (exact on a single shard, where X_loc covers all samples).
     if axis_size == 1:
-        if use_kernel:
+        if sparse:
+            from repro.kernels import ops as kops
+
+            def basis_op(u):
+                z = kops.ell_matvec(X_loc.dataT, X_loc.colsT, u)
+                return kops.ell_matvec(X_loc.data, X_loc.cols, z,
+                                       coeffs_loc) / n_global + lam * u
+        elif use_kernel:
             from repro.kernels import ops as kops
 
             def basis_op(u):
@@ -362,7 +392,15 @@ def pcg_samples(X_loc, coeffs_loc, n_global, lam, g, eps, max_iter,
 
     # MGS mixes the carried direction into all columns, so the whole basis
     # goes through the batched HVP (Hp is not reusable here).
-    if use_kernel:
+    if sparse:
+        from repro.kernels import ops as kops
+
+        def hvp_round(U, Hp):
+            del Hp
+            Z = kops.ell_matmat(X_loc.dataT, X_loc.colsT, U)
+            W_loc = kops.ell_matmat(X_loc.data, X_loc.cols, Z, coeffs_loc)
+            return lax.psum(W_loc, axis_name) / n_global + lam * U
+    elif use_kernel:
         from repro.kernels import ops as kops
 
         def hvp_round(U, Hp):
@@ -393,19 +431,36 @@ def pcg_samples(X_loc, coeffs_loc, n_global, lam, g, eps, max_iter,
 
 def pcg_features(X_loc, coeffs, n_global, lam, g_loc, eps, max_iter,
                  tau_idx=None, coeffs_tau=None, mu=0.0, axis_name="model",
-                 precond="woodbury", use_kernel=False, block_s=1):
+                 precond="woodbury", use_kernel=False, block_s=1,
+                 X_tau_loc=None):
     """Runs inside shard_map over ``axis_name``.
 
-    X_loc      : (d_j, n) local feature rows (all samples)
+    X_loc      : (d_j, n) local feature rows (all samples) — a dense array
+                 or a blocked-ELL :class:`repro.data.sparse.EllPair`
+                 (then every vector below carries the ELL-padded lengths)
     coeffs     : (n,) phi'' at w_k — *replicated* (derived from the globally
                  reduced margins, which every shard already holds)
     g_loc      : (d_j,) local gradient shard
     tau_idx    : (tau,) indices of the preconditioner samples
+    X_tau_loc  : (d_j, tau) dense local rows of the preconditioner samples;
+                 required for sparse ``X_loc`` (which cannot be column-
+                 sliced in-kernel), optional for dense
     block_s    : >1 selects the s-step engine (see pcg_samples)
     """
     n_global = jnp.asarray(n_global, X_loc.dtype)
+    sparse = isinstance(X_loc, EllPair)
 
-    if use_kernel:
+    if sparse:
+        from repro.kernels import ops as kops
+
+        def hvp(u_loc):
+            # ELL pass A produces the one communicated n-vector...
+            z = lax.psum(kops.ell_matvec(X_loc.dataT, X_loc.colsT, u_loc),
+                         axis_name)
+            # ...pass B fuses the coefficient scale into X @ (c*z)
+            return kops.ell_matvec(X_loc.data, X_loc.cols, z, coeffs) \
+                / n_global + lam * u_loc
+    elif use_kernel:
         from repro.kernels import ops as kops
 
         def hvp(u_loc):
@@ -421,7 +476,7 @@ def pcg_features(X_loc, coeffs, n_global, lam, g_loc, eps, max_iter,
             return X_loc @ (coeffs * z) / n_global + lam * u_loc
 
     apply_precond = _features_precond(precond, X_loc, tau_idx, coeffs_tau,
-                                      lam, mu)
+                                      lam, mu, X_tau_loc=X_tau_loc)
 
     # state vectors are sharded -> dots need a scalar psum (cheap)
     psum_dot = lambda a, b: lax.psum(jnp.vdot(a, b), axis_name)
@@ -435,7 +490,14 @@ def pcg_features(X_loc, coeffs, n_global, lam, g_loc, eps, max_iter,
     # Zero-communication basis operator: the block-diagonal local Hessian
     # X_j diag(c) X_j^T / n + lam I (exact on a single shard, where the
     # local rows are all rows).
-    if use_kernel:
+    if sparse:
+        from repro.kernels import ops as kops
+
+        def basis_op(u_loc):
+            z = kops.ell_matvec(X_loc.dataT, X_loc.colsT, u_loc)  # no psum
+            return kops.ell_matvec(X_loc.data, X_loc.cols, z, coeffs) \
+                / n_global + lam * u_loc
+    elif use_kernel:
         from repro.kernels import ops as kops
 
         def basis_op(u_loc):
@@ -460,7 +522,17 @@ def pcg_features(X_loc, coeffs, n_global, lam, g_loc, eps, max_iter,
     # in hand from last round's W a (carried as Hp in the loop state) — so
     # only the s Krylov columns ride the batched HVP and the communicated
     # payload is (n, s), not (n, s+1).
-    if use_kernel:
+    if sparse:
+        from repro.kernels import ops as kops
+
+        def hvp_round(U, Hp):
+            Uk = U[:, :s]
+            Z = lax.psum(kops.ell_matmat(X_loc.dataT, X_loc.colsT, Uk),
+                         axis_name)                            # (n, s)
+            Wk = kops.ell_matmat(X_loc.data, X_loc.cols, Z, coeffs) \
+                / n_global + lam * Uk
+            return jnp.concatenate([Wk, Hp[:, None]], axis=1)
+    elif use_kernel:
         from repro.kernels import ops as kops
 
         def hvp_round(U, Hp):

@@ -1,6 +1,15 @@
 from repro.data.synthetic import make_glm_data, REGIMES
 from repro.data.libsvm import load_libsvm, save_libsvm
+from repro.data.sparse import (CSRMatrix, BlockedEll, EllPair,
+                               ell_from_csr, load_libsvm_sparse,
+                               make_sparse_glm_data)
+from repro.data.partition import (Partition, equal_width_partition,
+                                  imbalance, lpt_partition, make_partition)
 from repro.data.tokens import TokenPipeline, synthetic_token_stream
 
 __all__ = ["make_glm_data", "REGIMES", "load_libsvm", "save_libsvm",
+           "CSRMatrix", "BlockedEll", "EllPair", "ell_from_csr",
+           "load_libsvm_sparse", "make_sparse_glm_data",
+           "Partition", "equal_width_partition", "imbalance",
+           "lpt_partition", "make_partition",
            "TokenPipeline", "synthetic_token_stream"]

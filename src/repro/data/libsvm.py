@@ -10,7 +10,17 @@ import numpy as np
 
 
 def load_libsvm(path: str, n_features: int | None = None, dtype=np.float32):
-    """Return X (d, n), y (n,) — note the paper's feature-major convention."""
+    """Return X (d, n), y (n,) — note the paper's feature-major convention.
+
+    An explicit ``n_features`` fixes the feature dimension: indices beyond
+    it are *truncated* (dropped, the standard libsvm-reader convention)
+    rather than written out of the intended range; a larger value pads
+    with empty features. Without it, ``d`` is the max index seen.
+
+    For sparse datasets prefer the streaming, bounded-memory
+    :func:`repro.data.sparse.load_libsvm_sparse`, which shares these
+    semantics.
+    """
     rows, ys = [], []
     max_feat = 0
     with open(path) as f:
@@ -26,16 +36,19 @@ def load_libsvm(path: str, n_features: int | None = None, dtype=np.float32):
                 feats[idx] = float(val)
                 max_feat = max(max_feat, idx)
             rows.append(feats)
-    d = n_features or max_feat
+    d = n_features if n_features is not None else max_feat
     n = len(rows)
     X = np.zeros((d, n), dtype=dtype)
     for j, feats in enumerate(rows):
         for idx, val in feats.items():
-            X[idx - 1, j] = val  # libsvm indices are 1-based
+            if idx <= d:             # truncate explicit out-of-range feats
+                X[idx - 1, j] = val  # libsvm indices are 1-based
     return X, np.asarray(ys, dtype=dtype)
 
 
 def save_libsvm(path: str, X: np.ndarray, y: np.ndarray):
+    """Write a dense feature-major ``X (d, n)``, ``y (n,)`` pair as
+    libsvm text (1-based feature indices, zeros omitted)."""
     d, n = X.shape
     with open(path, "w") as f:
         for j in range(n):

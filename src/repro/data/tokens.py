@@ -40,6 +40,9 @@ class TokenPipeline:
 
 def synthetic_token_stream(vocab_size: int, seq_len: int, global_batch: int,
                            steps: int, seed: int = 0):
+    """Yield ``steps`` synthetic ``(global_batch, seq_len)`` token
+    batches from a deterministic :class:`TokenPipeline` (training-loop
+    smoke tests and dry runs)."""
     pipe = TokenPipeline(vocab_size, seq_len, global_batch, seed)
     for s in range(steps):
         yield pipe.batch(s)

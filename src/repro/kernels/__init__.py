@@ -2,13 +2,16 @@
 
   glm_hvp         GLM Hessian-vector product (the DiSCO PCG inner loop)
   glm_hvp_multi   batched HVP over s probe vectors (the s-step PCG round)
+  ell_matvec      blocked-ELL sparse matvec (both sparse HVP passes)
+  ell_matmat      blocked-ELL multi-vector pass (sparse s-step rounds)
   flash_attention online-softmax attention (prefill path of the model zoo)
 
 Each kernel ships with a jnp oracle (``ref.py``) and a jit'd wrapper
 (``ops.py``) that dispatches native/interpret/ref by backend.
 """
-from repro.kernels.ops import (flash_attention, glm_hvp, glm_hvp_multi,
-                               x_cz_multi, xt_multi, xt_u)
+from repro.kernels.ops import (ell_matmat, ell_matvec, flash_attention,
+                               glm_hvp, glm_hvp_multi, x_cz_multi, xt_multi,
+                               xt_u)
 
 __all__ = ["glm_hvp", "glm_hvp_multi", "xt_u", "xt_multi", "x_cz_multi",
-           "flash_attention"]
+           "ell_matvec", "ell_matmat", "flash_attention"]

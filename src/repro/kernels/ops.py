@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from repro.kernels import glm_hvp as _hvp
 from repro.kernels import flash_attention as _fa
 from repro.kernels import ref as _ref
+from repro.kernels import sparse_hvp as _sparse
 from repro.utils.padding import pad_to_multiple as _pad_axis
 
 
@@ -153,6 +154,44 @@ def glm_hvp_multi(X, c, U, lam, *, block_d=512, block_n=512, mode=None):
     mode = mode or _mode()
     return _glm_hvp_multi_impl(X, c, U, jnp.asarray(lam, X.dtype),
                                block_d=block_d, block_n=block_n, mode=mode)
+
+
+# ---------------------------------------------------------------------------
+# Blocked-ELL sparse HVP passes (see data/sparse.py for the layout)
+# ---------------------------------------------------------------------------
+
+def ell_matvec(data, cols, v, c=None, *, mode=None):
+    """y = A @ (c .* v) for a blocked-ELL operand (sparse HVP pass).
+
+    data : (nb, W, br, bc) tiles; cols : (nb, W) int32 column-block ids
+    v    : (ncb * bc,) padded input; c optional same-length fused scale
+    returns (nb * br,). Streaming the forward layout of a shard computes
+    ``X_loc @ (c * z)`` (pass B); streaming the transposed layout computes
+    ``X_loc^T u`` (pass A) — one kernel covers both HVP directions
+    (docs/architecture.md#kernels).
+    """
+    mode = mode or _mode()
+    if mode == "ref":
+        return _ref.ref_ell_mv(data, cols, v, c)
+    return _sparse.ell_mv(data, cols, v, c,
+                          interpret=(mode == "interpret"))
+
+
+def ell_matmat(data, cols, V, c=None, *, mode=None):
+    """Y = A @ (c[:, None] .* V) over s probe vectors (s-step rounds).
+
+    V : (ncb * bc, s) -> (nb * br, s). The s axis is padded to the TPU
+    lane width for the native kernel and cropped back, mirroring
+    ``xt_multi``/``x_cz_multi``.
+    """
+    mode = mode or _mode()
+    if mode == "ref":
+        return _ref.ref_ell_mm(data, cols, V, c)
+    s = V.shape[1]
+    Vp, _ = _pad_axis(V, 1, LANE)
+    Y = _sparse.ell_mm(data, cols, Vp, c,
+                       interpret=(mode == "interpret"))
+    return Y[:, :s]
 
 
 # ---------------------------------------------------------------------------

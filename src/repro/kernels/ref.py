@@ -48,6 +48,35 @@ def ref_glm_hvp_multi(X, c, U, lam, n_global=None):
     return ref_x_cz_multi(X, c, ref_xt_multi(X, U)) / n + lam * U
 
 
+def ref_ell_mv(data, cols, v, c=None):
+    """Blocked-ELL generalized matvec  y = A (c .* v).
+
+    data : (nb, W, br, bc) tiles, cols : (nb, W) column-block indices,
+    v/c  : (ncb * bc,) padded vectors. Padding slots (cols = 0, zero tile)
+    gather a real vector block and multiply it by zeros — same contract as
+    the Pallas kernel (sparse_hvp.py).
+    """
+    nb, w, br, bc = data.shape
+    vv = v if c is None else c * v
+    g = vv.reshape(-1, bc)[cols]                       # (nb, W, bc)
+    y = jnp.einsum("iwab,iwb->ia", data, g)
+    return y.reshape(nb * br).astype(data.dtype)
+
+
+def ref_ell_mm(data, cols, V, c=None):
+    """Blocked-ELL generalized matmat  Y = A (c[:, None] .* V).
+
+    V : (ncb * bc, s) -> (nb * br, s); the multi-vector oracle of the
+    s-step sparse HVP round.
+    """
+    nb, w, br, bc = data.shape
+    s = V.shape[1]
+    VV = V if c is None else c[:, None] * V
+    g = VV.reshape(-1, bc, s)[cols]                    # (nb, W, bc, s)
+    y = jnp.einsum("iwab,iwbs->ias", data, g)
+    return y.reshape(nb * br, s).astype(data.dtype)
+
+
 def ref_attention(q, k, v, causal=True, window=0, scale=None):
     """Masked multi-head attention oracle.
 

@@ -1,0 +1,151 @@
+"""Pallas TPU kernels for the blocked-ELL sparse GLM HVP.
+
+The dense HVP kernels (glm_hvp.py) stream every tile of X; on the paper's
+sparse datasets (rcv1, news20, splice-site) most tiles are empty — the
+sparse path streams only the surviving tiles of the blocked-ELL layout
+built by :mod:`repro.data.sparse`:
+
+    data : (nb, W, br, bc)   dense tiles, per row-block a padded list
+    cols : (nb, W) int32     column-block index of each tile
+
+Kernel structure (the standard TPU block-sparse pattern): the grid is the
+*static* ``(nb, W)`` tile list — ``data[i, k]`` is plain block indexing —
+and only the **vector** block each tile multiplies is dynamic. ``cols``
+rides in as a scalar-prefetch operand (``PrefetchScalarGridSpec``), so the
+index maps of the vector operands can read ``cols[i, k]`` and the DMA for
+the right ``(bc,)`` vector chunk is issued ahead of the compute, exactly
+like a dense gather. Padding slots carry ``cols = 0`` with an all-zero
+tile: they fetch (and discard) a real vector block, keeping the grid
+rectangular with zero effect on the result.
+
+Both generalized matvec directions run through the same kernel: ``X @ v``
+streams the forward layout, ``X^T u`` streams the transposed layout
+(tiles stored pre-transposed), so every pass accumulates into its output
+row-block with the usual revisit-over-fastest-grid-axis reduction. The
+optional per-input-element scale ``c`` fuses ``X @ (c .* v)`` — the
+phi''-coefficient multiply of the HVP — into the tile pass, mirroring the
+dense ``x_cz`` kernels.
+
+Multi-vector variants (``*_mm``) amortize each tile read over ``s`` probe
+vectors for the s-step PCG engine, identical to the dense
+``xt_multi``/``x_cz_multi`` story (DESIGN.md §2).
+
+Cost model: one pass touches ``nb * W`` tiles — so the per-shard work is
+proportional to the *padded* tile count. The LPT partitioner balances
+per-shard nnz (the straggler time between barrier collectives); this
+usually also lowers the shared padded width, except when one tile-dense
+row-block saturates it for every assignment (docs/partitioning.md).
+
+VMEM per program: one ``(br, bc)`` tile + ``(bc,)``/``(bc, s)`` vector
+blocks + the ``(br,)``/``(br, s)`` accumulator — tiny; defaults
+``br = bc = 128`` keep every operand lane-aligned (TPU wants the minor
+two dims in multiples of (8, 128); interpret mode accepts any size).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# ---------------------------------------------------------------------------
+# generalized blocked-ELL matvec:  y = A (c .* v)
+# ---------------------------------------------------------------------------
+
+def _ell_mv_kernel(cols_ref, x_ref, c_ref, v_ref, y_ref):
+    """Grid (nb, W), k fastest: y[i] += tile[i,k] @ (c*v)[cols[i,k]]."""
+    del cols_ref  # consumed by the index maps (scalar prefetch)
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    x = x_ref[0, 0]                                   # (br, bc)
+    cv = (c_ref[...] * v_ref[...]).astype(x.dtype)    # (1, bc)
+    y_ref[...] += jnp.dot(x, cv.T,
+                          preferred_element_type=jnp.float32).T
+
+
+def ell_mv(data, cols, v, c=None, *, interpret=False):
+    """y = A @ (c .* v) for a blocked-ELL operand.
+
+    data : (nb, W, br, bc) tiles;  cols : (nb, W) int32
+    v    : (ncb * bc,) input vector (padded length)
+    c    : optional (ncb * bc,) per-element scale (fused in-kernel)
+    returns (nb * br,) in ``data.dtype``
+    """
+    nb, w, br, bc = data.shape
+    assert v.shape[0] % bc == 0, (v.shape, bc)
+    ncb = v.shape[0] // bc
+    if c is None:
+        c = jnp.ones_like(v)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb, w),
+        in_specs=[
+            pl.BlockSpec((1, 1, br, bc), lambda i, k, cols: (i, k, 0, 0)),
+            pl.BlockSpec((1, bc), lambda i, k, cols: (cols[i, k], 0)),
+            pl.BlockSpec((1, bc), lambda i, k, cols: (cols[i, k], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, br), lambda i, k, cols: (i, 0)),
+    )
+    out = pl.pallas_call(
+        _ell_mv_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nb, br), jnp.float32),
+        interpret=interpret,
+    )(cols, data, c.reshape(ncb, bc), v.reshape(ncb, bc))
+    return out.reshape(nb * br).astype(data.dtype)
+
+
+# ---------------------------------------------------------------------------
+# multi-vector:  Y = A (c .* V)     (s probe vectors per tile read)
+# ---------------------------------------------------------------------------
+
+def _ell_mm_kernel(cols_ref, x_ref, c_ref, v_ref, y_ref):
+    """Grid (nb, W), k fastest: Y[i] += tile[i,k] @ (c .* V)[cols[i,k]]."""
+    del cols_ref
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    x = x_ref[0, 0]                                   # (br, bc)
+    v = v_ref[...]                                    # (bc, s)
+    cv = (c_ref[...].reshape(-1, 1) * v).astype(x.dtype)
+    y_ref[0] += jnp.dot(x, cv, preferred_element_type=jnp.float32)
+
+
+def ell_mm(data, cols, V, c=None, *, interpret=False):
+    """Y = A @ (c[:, None] .* V) for a blocked-ELL operand.
+
+    V : (ncb * bc, s) probe block -> returns (nb * br, s). Each tile read
+    from HBM is amortized over all ``s`` columns (the s-step engine's
+    arithmetic-intensity win, same as the dense multi-vector kernels).
+    """
+    nb, w, br, bc = data.shape
+    n_in, s = V.shape
+    assert n_in % bc == 0, (V.shape, bc)
+    ncb = n_in // bc
+    if c is None:
+        c = jnp.ones((n_in,), V.dtype)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb, w),
+        in_specs=[
+            pl.BlockSpec((1, 1, br, bc), lambda i, k, cols: (i, k, 0, 0)),
+            pl.BlockSpec((1, bc), lambda i, k, cols: (cols[i, k], 0)),
+            pl.BlockSpec((bc, s), lambda i, k, cols: (cols[i, k], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, br, s), lambda i, k, cols: (i, 0, 0)),
+    )
+    out = pl.pallas_call(
+        _ell_mm_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nb, br, s), jnp.float32),
+        interpret=interpret,
+    )(cols, data, c.reshape(ncb, bc), V)
+    return out.reshape(nb * br, s).astype(data.dtype)

@@ -34,6 +34,8 @@ else:
     from jax.experimental.shard_map import shard_map as _shard_map
 
     def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kwargs):
+        """0.4.x fallback: ``jax.experimental.shard_map.shard_map`` with
+        the modern ``check_vma`` kwarg translated to ``check_rep``."""
         if check_vma is not None:
             kwargs["check_rep"] = check_vma
         return _shard_map(f, mesh=mesh, in_specs=in_specs,

@@ -47,3 +47,73 @@ def test_libsvm_roundtrip(tmp_path):
     X2, y2 = load_libsvm(p, n_features=8)
     np.testing.assert_allclose(X2, X, atol=1e-6)
     np.testing.assert_array_equal(y2, y)
+
+
+def test_libsvm_explicit_small_n_features_truncates(tmp_path):
+    """Regression (ISSUE 2): an explicit n_features below the max seen
+    index must *drop* the out-of-range features, not crash or write out
+    of the intended range."""
+    p = str(tmp_path / "trunc.svm")
+    with open(p, "w") as f:
+        f.write("1 1:1.5 7:2.5\n-1 2:3.5 3:4.5\n")
+    X, y = load_libsvm(p, n_features=3)
+    assert X.shape == (3, 2)
+    want = np.zeros((3, 2), np.float32)
+    want[0, 0] = 1.5            # feature 7 of sample 0 dropped
+    want[1, 1] = 3.5
+    want[2, 1] = 4.5
+    np.testing.assert_allclose(X, want)
+    np.testing.assert_array_equal(y, [1.0, -1.0])
+
+
+def test_libsvm_n_features_pads(tmp_path):
+    p = str(tmp_path / "pad.svm")
+    with open(p, "w") as f:
+        f.write("1 1:2.0\n")
+    X, _ = load_libsvm(p, n_features=5)
+    assert X.shape == (5, 1) and X[0, 0] == 2.0 and X[1:].sum() == 0
+
+
+def test_libsvm_property_roundtrip_dense_vs_sparse_reader():
+    """Property test: save_libsvm -> load_libsvm == load_libsvm_sparse
+    (the new streaming reader) across random sparse matrices."""
+    hyp = pytest.importorskip("hypothesis")
+    hnp = pytest.importorskip("hypothesis.extra.numpy")
+    from hypothesis import given, settings, strategies as st
+    import tempfile, os
+
+    from repro.data.sparse import load_libsvm_sparse
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        arr=hnp.arrays(np.float32,
+                       hnp.array_shapes(min_dims=2, max_dims=2,
+                                        min_side=1, max_side=12),
+                       elements=st.floats(-8, 8, width=32)
+                       .map(lambda v: np.float32(round(v, 2)))),
+        keep=st.floats(0.1, 0.9),
+        chunk=st.integers(1, 16),
+    )
+    def roundtrip(arr, keep, chunk):
+        d, n = arr.shape
+        rng = np.random.default_rng(0)
+        X = np.where(rng.random(arr.shape) < keep, arr, 0.0
+                     ).astype(np.float32)
+        y = np.sign(rng.standard_normal(n)).astype(np.float32)
+        y[y == 0] = 1.0
+        fd, path = tempfile.mkstemp(suffix=".svm")
+        os.close(fd)
+        try:
+            save_libsvm(path, X, y)
+            Xd, yd = load_libsvm(path, n_features=d)
+            Xs, ys = load_libsvm_sparse(path, n_features=d,
+                                        chunk_samples=chunk)
+            np.testing.assert_allclose(Xd, X, atol=1e-5, rtol=1e-4)
+            np.testing.assert_allclose(Xs.todense(), Xd,
+                                       atol=1e-6, rtol=1e-6)
+            np.testing.assert_array_equal(ys, yd)
+            np.testing.assert_array_equal(yd, y)
+        finally:
+            os.unlink(path)
+
+    roundtrip()

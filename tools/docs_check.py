@@ -1,0 +1,102 @@
+"""Documentation gate (run by ``make docs-check``; part of the tier-1
+Makefile path).
+
+Two checks, both fail-fast with a nonzero exit:
+
+1. **Intra-repo links**: every relative markdown link ``[text](target)``
+   in the repo's ``*.md`` files must resolve to an existing file
+   (anchors are stripped; http(s)/mailto links are ignored).
+2. **Public docstrings**: every symbol exported via ``__all__`` from the
+   public packages (``repro.core``, ``repro.data``, ``repro.kernels``,
+   ``repro.utils``) must carry a non-empty docstring, and so must every
+   public function of the cost model ``repro.core.comm`` and the kernel
+   entry points in ``repro.kernels.ops``.
+"""
+from __future__ import annotations
+
+import inspect
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+MD_DIRS = ["", "docs"]                      # repo root + docs/
+SKIP_MD = {"CHANGES.md"}                    # running log, not documentation
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+PUBLIC_PACKAGES = ["repro.core", "repro.data", "repro.kernels",
+                   "repro.utils"]
+FUNCTION_MODULES = ["repro.core.comm", "repro.kernels.ops"]
+
+
+def check_links() -> list[str]:
+    errors = []
+    for rel in MD_DIRS:
+        base = os.path.join(REPO, rel)
+        if not os.path.isdir(base):
+            continue
+        for fname in sorted(os.listdir(base)):
+            if not fname.endswith(".md") or fname in SKIP_MD:
+                continue
+            path = os.path.join(base, fname)
+            with open(path) as f:
+                text = f.read()
+            for target in LINK_RE.findall(text):
+                if target.startswith(("http://", "https://", "mailto:",
+                                      "#")):
+                    continue
+                dest = target.split("#", 1)[0]
+                if not dest:
+                    continue
+                resolved = os.path.normpath(os.path.join(base, dest))
+                if not os.path.exists(resolved):
+                    errors.append(f"{os.path.join(rel, fname)}: broken "
+                                  f"link -> {target}")
+    return errors
+
+
+def check_docstrings() -> list[str]:
+    errors = []
+    for pkg_name in PUBLIC_PACKAGES:
+        pkg = __import__(pkg_name, fromlist=["__all__"])
+        exported = getattr(pkg, "__all__", None)
+        if exported is None:
+            errors.append(f"{pkg_name}: missing __all__")
+            continue
+        for name in exported:
+            obj = getattr(pkg, name, None)
+            if obj is None:
+                errors.append(f"{pkg_name}.{name}: exported but missing")
+                continue
+            mod = getattr(obj, "__module__", "") or ""
+            if mod and not mod.startswith("repro"):
+                continue                    # re-exported external object
+            if not (getattr(obj, "__doc__", None) or "").strip():
+                errors.append(f"{pkg_name}.{name}: missing docstring")
+    for mod_name in FUNCTION_MODULES:
+        mod = __import__(mod_name, fromlist=["_"])
+        for name, obj in vars(mod).items():
+            if name.startswith("_") or not inspect.isfunction(obj):
+                continue
+            if obj.__module__ != mod_name:
+                continue                    # re-exported helper
+            if not (obj.__doc__ or "").strip():
+                errors.append(f"{mod_name}.{name}: missing docstring")
+    return errors
+
+
+def main() -> int:
+    errors = check_links() + check_docstrings()
+    for e in errors:
+        print(f"[docs-check] {e}")
+    if errors:
+        print(f"[docs-check] FAIL: {len(errors)} problem(s)")
+        return 1
+    print("[docs-check] OK: links resolve, public API documented")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

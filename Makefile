@@ -2,22 +2,29 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast bench bench-sstep bench-loadbalance docs-check
+.PHONY: test test-fast bench bench-smoke bench-sstep bench-loadbalance \
+	bench-streaming docs-check
 
-test: docs-check ## tier-1 verify: docs gate + full suite, stop on first failure
+test: docs-check bench-smoke ## tier-1 verify: docs gate + bench smoke + full suite
 	$(PY) -m pytest -x -q
 
 test-fast:       ## skip the slow multi-device subprocess tests
 	$(PY) -m pytest -x -q -m "not slow"
 
-docs-check:      ## fail on broken intra-repo doc links / missing public docstrings
+docs-check:      ## fail on broken doc links / missing docstrings / unwired bench gates
 	$(PY) tools/docs_check.py
 
-bench:           ## full benchmark suite (paper figures + s-step + load balance)
+bench:           ## full benchmark suite (paper figures + s-step + load balance + streaming)
 	$(PY) -m benchmarks.run
+
+bench-smoke:     ## every benchmark at tiny shapes (CI smoke; also part of `make test`)
+	$(PY) -m benchmarks.run --smoke
 
 bench-sstep:     ## s-step communication-avoiding PCG bench only
 	$(PY) -m benchmarks.bench_sstep
 
 bench-loadbalance: ## LPT vs equal-width sparse partitioning bench only
 	$(PY) -m benchmarks.bench_loadbalance
+
+bench-streaming: ## out-of-core streaming solver gate only
+	$(PY) -m benchmarks.bench_streaming

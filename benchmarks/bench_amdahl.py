@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import save_json, table
+from benchmarks.common import save_json, smoke, table
 from repro.core.preconditioner import WoodburyPreconditioner, sag_solve
 from repro.data.synthetic import make_glm_data
 
@@ -38,6 +38,8 @@ def amdahl(serial_frac, m):
 
 
 def run(d=4096, n=2048, tau=100, pcg_iters=20, quiet=False):
+    if smoke():
+        d, n, tau, pcg_iters = 512, 256, 32, 5
     X, y, _ = make_glm_data(d=d, n=n, seed=0)
     X = jnp.asarray(X)
     c = jnp.asarray(np.random.default_rng(0).random(n) + 0.1, jnp.float32)

@@ -7,7 +7,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import save_json, table
+from benchmarks.common import save_json, smoke, table
 from repro.core import DiscoConfig, disco_fit
 from repro.core.baselines.cocoa import CocoaConfig, cocoa_fit
 from repro.core.baselines.dane import DaneConfig, dane_fit
@@ -30,8 +30,15 @@ def run(loss="logistic", regimes=None, quiet=False):
     traces = {}
     for regime in regimes or REGIME_LAMBDA:
         lam = REGIME_LAMBDA[regime]
-        X, y, _ = make_regime(regime)
-        n_outer = MAX_OUTER
+        if smoke():
+            from repro.data.synthetic import REGIMES, make_glm_data
+            d0, n0 = REGIMES[regime]
+            X, y, _ = make_glm_data(max(d0 // 16, 32), max(n0 // 16, 32),
+                                    seed=0)
+            n_outer = 5
+        else:
+            X, y, _ = make_regime(regime)
+            n_outer = MAX_OUTER
 
         def record(name, gnorms, rounds_cum):
             traces[f"{regime}/{loss}/{name}"] = {

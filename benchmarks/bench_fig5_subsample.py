@@ -6,7 +6,7 @@ from __future__ import annotations
 
 import time
 
-from benchmarks.common import save_json, table
+from benchmarks.common import save_json, smoke, table
 from repro.core import DiscoConfig, disco_fit
 from repro.data.synthetic import make_regime
 
@@ -14,9 +14,17 @@ FRACTIONS = (1.0, 0.5, 0.25, 0.125, 0.0625)
 
 
 def run(regime="rcv1_like", loss="logistic", lam=1e-4, quiet=False):
-    X, y, _ = make_regime(regime)
+    if smoke():
+        from repro.data.synthetic import REGIMES, make_glm_data
+        d0, n0 = REGIMES[regime]
+        X, y, _ = make_glm_data(max(d0 // 16, 32), max(n0 // 16, 32),
+                                seed=0)
+        fractions = (1.0, 0.25)
+    else:
+        X, y, _ = make_regime(regime)
+        fractions = FRACTIONS
     rows = []
-    for frac in FRACTIONS:
+    for frac in fractions:
         t0 = time.perf_counter()
         res = disco_fit(X, y, DiscoConfig(
             loss=loss, lam=lam, tau=100, partition="features",

@@ -32,7 +32,7 @@ import textwrap
 
 import numpy as np
 
-from benchmarks.common import save_json, table
+from benchmarks.common import save_json, smoke, table
 from repro.core import comm
 from repro.data.partition import make_partition
 from repro.data.sparse import (ell_from_csr, make_sparse_glm_data,
@@ -115,16 +115,19 @@ def _run_e2e(quiet):
 
 
 def run(quiet=False, e2e=True):
-    X, y, _ = make_sparse_glm_data(d=D, n=N, density=DENSITY, alpha=ALPHA,
+    d, n, m = (D // 4, N // 4, 4) if smoke() else (D, N, M)
+    if smoke():
+        e2e = False                 # no subprocess sweep in the CI smoke
+    X, y, _ = make_sparse_glm_data(d=d, n=n, density=DENSITY, alpha=ALPHA,
                                    beta=BETA, seed=0)
     rows, gate = [], {}
     for axis in ("features", "samples"):
         per = {}
         for strat in ("width", "lpt"):
-            part = make_partition(X, axis, M, strat, pad_multiple=BLOCK)
+            part = make_partition(X, axis, m, strat, pad_multiple=BLOCK)
             tiles, wmax = _shard_tile_stream(X, part, axis, BLOCK)
             model = comm.disco_sparse_iter_time(
-                part.shard_nnz, PCG_ITERS, axis, n=N, d=D, m=M)
+                part.shard_nnz, PCG_ITERS, axis, n=n, d=d, m=m)
             per[strat] = dict(imbalance=part.imbalance, tiles=tiles)
             rows.append(dict(
                 partition=axis, strategy=strat,
@@ -144,7 +147,7 @@ def run(quiet=False, e2e=True):
                        "ell_tiles_per_pass", "ell_width_max",
                        "model_iter_ms", "model_compute_ms"],
                 title=f"nnz load-balancing — LPT vs equal-width "
-                      f"(m={M}, power-law d={D} n={N})")
+                      f"(m={m}, power-law d={d} n={n})")
     ok = all(v["ratio"] >= 2.0 for v in gate.values())
 
     e2e_res = _run_e2e(quiet) if e2e else None

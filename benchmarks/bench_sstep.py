@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import Timer, save_json, table
+from benchmarks.common import Timer, save_json, smoke, table
 from repro.core import DiscoConfig, DiscoSolver
 from repro.data.synthetic import make_glm_data
 
@@ -33,6 +33,8 @@ S_VALUES = (1, 2, 4, 8)
 
 
 def run(quiet=False, d=128, n=1024, max_outer=10):
+    if smoke():
+        d, n, max_outer = 64, 256, 3
     X, y, _ = make_glm_data(d=d, n=n, cond_decay=1.5, seed=0)
     kw = dict(loss="logistic", lam=1e-5, tau=16, max_outer=max_outer,
               grad_tol=1e-8, pcg_rel_tol=0.02)

@@ -14,11 +14,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import save_json, table
+from benchmarks.common import save_json, smoke, table
 from repro.core.preconditioner import WoodburyPreconditioner, sag_solve
 
 
 def run(d=2048, tau=100, quiet=False):
+    if smoke():
+        d, tau = 256, 32
     rng = np.random.default_rng(0)
     X_tau = jnp.asarray(rng.standard_normal((d, tau)), jnp.float32)
     c = jnp.asarray(rng.random(tau) + 0.1, jnp.float32)

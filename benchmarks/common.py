@@ -9,6 +9,13 @@ import time
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
 
 
+def smoke() -> bool:
+    """True when REPRO_BENCH_SMOKE=1 (the ``make bench-smoke`` CI gate):
+    every benchmark shrinks to tiny shapes / skips subprocess sweeps so
+    the whole suite exercises its code paths in a couple of minutes."""
+    return os.environ.get("REPRO_BENCH_SMOKE") == "1"
+
+
 def save_json(name: str, payload):
     os.makedirs(RESULTS_DIR, exist_ok=True)
     path = os.path.join(RESULTS_DIR, f"{name}.json")

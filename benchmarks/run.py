@@ -1,8 +1,10 @@
 """Benchmark harness entry point: ``python -m benchmarks.run``.
 
 Runs every paper-table/figure benchmark (fig3, fig4, fig5, table4,
-woodbury) and, if a dry-run results file exists, the roofline analysis.
-``--quick`` runs a reduced set for CI smoke.
+woodbury), the gated engine benches (sstep, loadbalance, streaming),
+the amdahl decomposition, and — if a dry-run results file exists — the
+roofline analysis. ``--quick`` skips the expensive sweeps; ``--smoke``
+(the ``make bench-smoke`` CI gate) runs *everything* at tiny shapes.
 """
 from __future__ import annotations
 
@@ -16,19 +18,29 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="fig4/fig5/table4/woodbury only (no fig3 sweep)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="every benchmark at tiny shapes (the "
+                         "`make bench-smoke` CI gate; sets "
+                         "REPRO_BENCH_SMOKE=1)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig3,fig4,fig5,table4,"
-                         "sstep,loadbalance,woodbury,amdahl,roofline")
+                         "sstep,loadbalance,streaming,woodbury,amdahl,"
+                         "roofline")
     args = ap.parse_args(argv)
+
+    if args.smoke:
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+        os.environ.setdefault("REPRO_KERNEL_MODE", "ref")
 
     selected = set(args.only.split(",")) if args.only else None
 
     def want(name):
         if selected is not None:
             return name in selected
-        if args.quick:
+        if args.quick and not args.smoke:
             # these run many full fits (or a forced-8-device subprocess)
-            return name not in ("fig3", "sstep", "loadbalance")
+            return name not in ("fig3", "sstep", "loadbalance",
+                                "streaming")
         return True
 
     t0 = time.perf_counter()
@@ -47,6 +59,10 @@ def main(argv=None):
     if want("loadbalance"):
         from benchmarks import bench_loadbalance
         bench_loadbalance.main()
+        print()
+    if want("streaming"):
+        from benchmarks import bench_streaming
+        bench_streaming.run()
         print()
     if want("woodbury"):
         from benchmarks import bench_woodbury

@@ -3,13 +3,15 @@ from repro.core.losses import get_loss, LOSSES, QUADRATIC, LOGISTIC, SQUARED_HIN
 from repro.core.glm import GLMProblem
 from repro.core.preconditioner import (WoodburyPreconditioner,
                                        IdentityPreconditioner, sag_solve)
-from repro.core.pcg import pcg_samples, pcg_features, PCGResult
-from repro.core.disco import DiscoConfig, DiscoSolver, DiscoResult, disco_fit
+from repro.core.pcg import pcg_samples, pcg_features, pcg_streamed, PCGResult
+from repro.core.disco import (DiscoConfig, DiscoSolver, DiscoResult,
+                              disco_fit, disco_fit_streaming)
 from repro.core import comm
 
 __all__ = [
     "get_loss", "LOSSES", "QUADRATIC", "LOGISTIC", "SQUARED_HINGE",
     "GLMProblem", "WoodburyPreconditioner", "IdentityPreconditioner",
-    "sag_solve", "pcg_samples", "pcg_features", "PCGResult",
-    "DiscoConfig", "DiscoSolver", "DiscoResult", "disco_fit", "comm",
+    "sag_solve", "pcg_samples", "pcg_features", "pcg_streamed",
+    "PCGResult", "DiscoConfig", "DiscoSolver", "DiscoResult", "disco_fit",
+    "disco_fit_streaming", "comm",
 ]

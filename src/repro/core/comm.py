@@ -186,3 +186,75 @@ def disco_sparse_iter_time(shard_nnz, pcg_iters: int, partition: str,
     return dict(compute_s=compute_s, comm_s=comm_s,
                 total_s=compute_s + comm_s,
                 straggler=straggler_factor(shard_nnz))
+
+
+# ---------------------------------------------------------------------------
+# out-of-core streaming extension (docs/streaming.md)
+#
+# When the data plane lives on disk (repro.data.store + repro.data.stream),
+# every HVP re-reads the shard's chunks; the prefetch pipeline overlaps
+# that I/O with kernel execution, so the per-iteration wall-clock pays
+# max(io, compute), not their sum — plus a one-time pipeline fill of
+# prefetch_depth chunks at the head of each pass.
+# ---------------------------------------------------------------------------
+
+STREAM_BYTES_PER_NNZ = 8  # stored CSR chunk payload: 4B value + 4B index
+
+
+def streaming_data_passes(partition: str, pcg_iters: int, s: int = 1) -> int:
+    """Full passes over the on-disk shard data for ONE Newton iteration.
+
+    DiSCO-S sample-chunks complete both HVP directions per chunk (one
+    pass per HVP application; the s-step basis operator is the resident
+    tau-sample estimate, costing no I/O); DiSCO-F feature-chunks must
+    finish pass A (the n-vector) before pass B starts (two passes per
+    operator application, including each of the ``s - 1`` streamed
+    zero-communication basis products of an s-step round). The margins +
+    gradient of the outer step add 2 (features) / 2 (samples) passes.
+    """
+    if partition == "features":
+        per_round = 2 * max(s, 1)            # 2(s-1) basis + 2 true HVP
+        return 2 + pcg_iters * per_round
+    if partition == "samples":
+        return 2 + pcg_iters
+    raise ValueError(f"unknown partition {partition!r}")
+
+
+def disco_streaming_iter_time(shard_nnz, pcg_iters: int, partition: str,
+                              n: int, d: int, m: int, s: int = 1, *,
+                              chunk_nnz_max: int, prefetch_depth: int = 2,
+                              flops_per_sec: float = 5e11,
+                              bytes_per_sec: float = 1e10,
+                              latency_s: float = 5e-6,
+                              disk_bytes_per_sec: float = 2e9) -> dict:
+    """Modeled seconds for ONE Newton iteration of a *streaming* solve.
+
+    Extends :func:`disco_sparse_iter_time` with the I/O plane: every data
+    pass re-reads the heaviest shard's chunk bytes from disk
+    (``STREAM_BYTES_PER_NNZ`` per nonzero), and the prefetch pipeline
+    credits I/O–compute overlap: the streamed phase costs
+    ``max(io_s, compute_s)`` plus a pipeline fill of ``prefetch_depth``
+    chunks per pass, instead of ``io_s + compute_s``.
+
+    Returns a dict with ``io_s``, ``compute_s``, ``comm_s``, ``fill_s``,
+    the overlapped ``total_s``, the naive ``total_no_overlap_s``, and
+    ``overlap_savings_s`` so benchmarks can attribute the pipeline win.
+    """
+    base = disco_sparse_iter_time(
+        shard_nnz, pcg_iters, partition, n=n, d=d, m=m, s=s,
+        flops_per_sec=flops_per_sec, bytes_per_sec=bytes_per_sec,
+        latency_s=latency_s)
+    shard_nnz = np.asarray(shard_nnz, np.float64)
+    max_nnz = float(shard_nnz.max()) if len(shard_nnz) else 0.0
+    passes = streaming_data_passes(partition, pcg_iters, s)
+    io_s = passes * max_nnz * STREAM_BYTES_PER_NNZ / disk_bytes_per_sec
+    fill_s = passes * prefetch_depth * chunk_nnz_max \
+        * STREAM_BYTES_PER_NNZ / disk_bytes_per_sec
+    compute_s, comm_s = base["compute_s"], base["comm_s"]
+    total = comm_s + max(io_s, compute_s) + fill_s
+    total_naive = comm_s + io_s + compute_s + fill_s
+    return dict(io_s=io_s, compute_s=compute_s, comm_s=comm_s,
+                fill_s=fill_s, data_passes=passes, total_s=total,
+                total_no_overlap_s=total_naive,
+                overlap_savings_s=total_naive - total,
+                straggler=base["straggler"])

@@ -69,9 +69,21 @@ class DiscoConfig:
             *nonzeros* with the capacity-constrained LPT greedy
             (docs/partitioning.md), 'width' is the naive equal-width
             baseline. Dense inputs always slice equal-width.
+        partition_block: granularity (indices per block) of the nnz
+            balancer for in-memory sparse inputs; 1 balances per index.
+            Set to the store chunk size to reproduce a streaming solve's
+            chunk-granular assignment exactly (docs/streaming.md).
         ell_block_d: blocked-ELL tile rows (feature axis) for sparse
             inputs; TPU-native kernels want multiples of 8 (128 ideal).
         ell_block_n: blocked-ELL tile columns (sample axis).
+        stream_chunk_size: out-of-core solves — indices per on-disk
+            chunk along the partition axis when :func:`disco_fit_streaming`
+            converts in-memory data to a :class:`repro.data.store.ShardStore`
+            (must be a multiple of the partition axis' ELL tile edge).
+        prefetch_depth: out-of-core solves — chunk payloads the
+            background prefetch thread keeps in flight ahead of the
+            kernels; peak data-plane memory scales with
+            ``stream_chunk_size * prefetch_depth`` (docs/streaming.md).
         seed: PRNG seed (Hessian subsampling draws).
     """
 
@@ -90,8 +102,11 @@ class DiscoConfig:
     use_kernel: bool = False        # Pallas glm_hvp in the PCG hot path
     pcg_block_s: int = 1            # s-step PCG: Krylov vectors per comm round
     partition_strategy: str = "lpt"  # sparse: 'lpt' (nnz-balanced) | 'width'
+    partition_block: int = 1        # nnz-balancer granularity (indices/block)
     ell_block_d: int = 128          # sparse tile rows (feature axis)
     ell_block_n: int = 128          # sparse tile cols (sample axis)
+    stream_chunk_size: int = 4096   # out-of-core: indices per disk chunk
+    prefetch_depth: int = 2         # out-of-core: chunks prefetched ahead
     seed: int = 0
 
 
@@ -110,6 +125,10 @@ class DiscoResult:
             :meth:`repro.data.partition.Partition.stats`, including the
             ``imbalance`` metric (max_shard_nnz / mean_shard_nnz) the
             paper's load-balancing contribution targets; None for dense.
+        stream_stats: out-of-core solves only — the prefetch pipeline's
+            byte ledger (``peak_bytes``, ``bytes_loaded``, ``passes``,
+            ``max_step_bytes``; see
+            :class:`repro.data.stream.PrefetchStats`); None otherwise.
     """
 
     w: np.ndarray
@@ -117,6 +136,7 @@ class DiscoResult:
     ledger: comm.CommLedger
     converged: bool
     partition_info: dict[str, Any] | None = None
+    stream_stats: dict[str, Any] | None = None
 
     @property
     def grad_norms(self) -> np.ndarray:
@@ -165,6 +185,7 @@ class DiscoSolver:
     """
 
     def __init__(self, X, y, cfg: DiscoConfig, mesh: Mesh | None = None):
+        self._streaming = False
         self._sparse = isinstance(X, CSRMatrix)
         if not self._sparse:
             X = np.asarray(X)
@@ -249,7 +270,9 @@ class DiscoSolver:
 
         if cfg.partition == "features":
             part = make_partition(X, "features", m,
-                                  cfg.partition_strategy, pad_multiple=br)
+                                  cfg.partition_strategy,
+                                  block=cfg.partition_block,
+                                  pad_multiple=br)
             shard_csrs = shard_csrs_from_partition(X, part, "features")
             data, cols, dataT, colsT = build_shard_ell_pairs(
                 shard_csrs, br, bc)
@@ -278,7 +301,9 @@ class DiscoSolver:
             self._w_shape = (self.d_padded,)
         elif cfg.partition == "samples":
             part = make_partition(X, "samples", m,
-                                  cfg.partition_strategy, pad_multiple=bc)
+                                  cfg.partition_strategy,
+                                  block=cfg.partition_block,
+                                  pad_multiple=bc)
             shard_csrs = shard_csrs_from_partition(X, part, "samples")
             data, cols, dataT, colsT = build_shard_ell_pairs(
                 shard_csrs, br, bc)
@@ -499,6 +524,349 @@ class DiscoSolver:
         return jax.jit(step)
 
     # ------------------------------------------------------------------
+    # out-of-core streaming path (docs/streaming.md)
+    # ------------------------------------------------------------------
+
+    @classmethod
+    def from_store(cls, store, cfg: DiscoConfig, mesh: Mesh | None = None
+                   ) -> "DiscoSolver":
+        """Build a solver that *streams* a :class:`repro.data.store.ShardStore`.
+
+        The store's chunked axis must match ``cfg.partition``. Peak
+        data-plane memory is bounded by ``m * chunk_size *
+        (cfg.prefetch_depth + 2)`` tile payloads — never the dataset:
+        every Hessian product is a scan over prefetched chunk tiles
+        (:mod:`repro.data.stream`) reusing the blocked-ELL kernels, with
+        the chunk-granular LPT balancer assigning chunks to shards from
+        the store's nnz header alone. The outer loop, damped step,
+        stopping rules and preconditioners are identical to the
+        in-memory solver; :meth:`fit` works unchanged and additionally
+        reports ``DiscoResult.stream_stats``.
+        """
+        from repro.data.stream import plan_streams
+
+        if store.axis != cfg.partition:
+            raise ValueError(
+                f"store is chunked along {store.axis!r} but cfg.partition "
+                f"is {cfg.partition!r}; rebuild the store along the "
+                f"partition axis")
+        self = cls.__new__(cls)
+        self._streaming = True
+        self._sparse = True
+        self.cfg = cfg
+        self.loss = get_loss(cfg.loss)
+        self.d, self.n = store.shape
+        self.tau = min(cfg.tau, self.n)
+        axis = "model" if cfg.partition == "features" else "data"
+        self.axis = axis
+        self.mesh = mesh if mesh is not None else _single_axis_mesh(axis)
+        self.m = self.mesh.shape[axis]
+
+        def put(arrs):
+            out = {}
+            for k, a in arrs.items():
+                spec = P(axis, *([None] * (a.ndim - 1)))
+                out[k] = jax.device_put(
+                    jnp.asarray(a), NamedSharding(self.mesh, spec))
+            return out
+
+        self._plan = plan_streams(
+            store, self.m, cfg.partition_strategy,
+            block_rows=cfg.ell_block_d, block_cols=cfg.ell_block_n,
+            prefetch_depth=cfg.prefetch_depth, device_put=put)
+        self._part = self._plan.partition
+        self._init_streaming()
+        self._step = self._build_step_streaming()
+        return self
+
+    def _init_streaming(self):
+        """Resident (small) arrays of a streaming solve: labels, sample
+        mask, and the dense tau-sample preconditioner slab — everything
+        except the X chunks, which stay on disk."""
+        cfg, plan = self.cfg, self._plan
+        store = plan.store
+        d, n, tau, m = self.d, self.n, self.tau, self.m
+        chunk, T, width = plan.chunk_size, plan.n_steps, plan.width_local
+        dtype = store.dtype
+        y = np.asarray(store.labels())
+        rep = NamedSharding(self.mesh, P())
+
+        if cfg.partition == "features":
+            self.d_padded = plan.axis_padded
+            self.n_padded = plan.other_padded
+            y_p = np.pad(y, (0, self.n_padded - n)).astype(dtype)
+            smask = np.zeros(self.n_padded, dtype)
+            smask[:n] = 1.0
+            # permuted tau slab, assembled chunk by chunk (tau columns of
+            # each chunk's local feature rows — the only dense read)
+            X_tau = np.zeros((m, width, tau), dtype)
+            for s in range(m):
+                for t in range(T):
+                    cid = int(plan.schedule[s, t])
+                    if cid < 0:
+                        continue
+                    slab = store.chunk_csr(cid).take_cols_dense(
+                        np.arange(tau))
+                    X_tau[s, t * chunk: t * chunk + slab.shape[0]] = slab
+            self.X_tau = jax.device_put(
+                jnp.asarray(X_tau),
+                NamedSharding(self.mesh, P(self.axis, None, None)))
+            self.y = jax.device_put(jnp.asarray(y_p), rep)
+            self.smask = jax.device_put(jnp.asarray(smask), rep)
+            self._w_sharding = NamedSharding(self.mesh, P(self.axis))
+            self._w_shape = (self.d_padded,)
+        else:  # samples
+            self.n_padded = plan.axis_padded
+            self.d_padded = plan.other_padded
+            part = self._part
+            ext = np.pad(y, (0, self.n_padded - n)).astype(dtype)
+            self.y = jax.device_put(jnp.asarray(ext[part.perm]),
+                                    NamedSharding(self.mesh, P(self.axis)))
+            wts = np.pad(np.ones(n, dtype), (0, self.n_padded - n))
+            self.weights = jax.device_put(
+                jnp.asarray(wts[part.perm]),
+                NamedSharding(self.mesh, P(self.axis)))
+            # first tau *original* samples, read from the chunks that
+            # cover them (sample chunks are in original file order)
+            X_tau = np.zeros((self.d_padded, tau), dtype)
+            pos = 0
+            while pos < tau:
+                cid = pos // store.chunk_size
+                info = store.chunks[cid]
+                cnt = min(tau, info.stop) - pos
+                sub = store.chunk_csr(cid).take_rows(
+                    np.arange(pos - info.start, pos - info.start + cnt))
+                X_tau[:d, pos: pos + cnt] = sub.todense().T
+                pos += cnt
+            self.X_tau = jax.device_put(jnp.asarray(X_tau), rep)
+            self._w_sharding = rep
+            self._w_shape = (self.d_padded,)
+        self.y_tau = jax.device_put(jnp.asarray(y[:tau].astype(dtype)),
+                                    rep)
+
+    # -- streamed X products (each is one prefetched pass over the store)
+    def _slab(self, vec, s, t):
+        chunk, width = self._plan.chunk_size, self._plan.width_local
+        start = s * width + t * chunk
+        return vec[start: start + chunk]
+
+    def _stream_xt(self, u, local=False, multi=False):
+        """Pass A — ``z = X^T u`` over the permuted padded axis.
+
+        features: streams the transposed chunk layouts and accumulates
+        each chunk's ``(n_padded,)`` (or ``(n_padded, k)``) contribution;
+        ``local=True`` keeps per-shard partial sums ``(m, n_padded)``
+        (the zero-communication s-step basis operator).
+        """
+        from repro.kernels import ops as kops
+
+        plan, m = self._plan, self.m
+        op = kops.ell_matmat if multi else kops.ell_matvec
+        shape = (self.n_padded, u.shape[1]) if multi else (self.n_padded,)
+        if local:
+            shape = (m,) + shape
+        acc = jnp.zeros(shape, u.dtype)
+        for t, payload in enumerate(plan.stream("tr")):
+            for s in range(m):
+                contrib = op(payload["dataT"][s], payload["colsT"][s],
+                             self._slab(u, s, t))
+                acc = acc.at[s].add(contrib) if local else acc + contrib
+        return acc
+
+    def _stream_x(self, z, coeffs=None, local=False, multi=False):
+        """Pass B — ``y = X (c .* z)`` back onto the permuted padded axis.
+
+        features: streams the forward chunk layouts; each chunk emits its
+        own slab of the output, concatenated in schedule order (exactly
+        the permuted layout). ``local=True`` reads per-shard inputs
+        ``z: (m, n_padded)`` (s-step basis operator pass B).
+        """
+        from repro.kernels import ops as kops
+
+        plan, m = self._plan, self.m
+        op = kops.ell_matmat if multi else kops.ell_matvec
+        parts = [[None] * plan.n_steps for _ in range(m)]
+        for t, payload in enumerate(plan.stream("fwd")):
+            for s in range(m):
+                zin = z[s] if local else z
+                parts[s][t] = op(payload["data"][s], payload["cols"][s],
+                                 zin, coeffs)
+        return jnp.concatenate([jnp.concatenate(parts[s])
+                                for s in range(m)])
+
+    def _stream_hvp_samples(self, u, coeffs, multi=False):
+        """DiSCO-S fused pass: each sample chunk completes both HVP
+        directions locally (``X_t (c_t .* (X_t^T u))``), so one pass over
+        the store serves the whole product."""
+        from repro.kernels import ops as kops
+
+        plan, m = self._plan, self.m
+        op = kops.ell_matmat if multi else kops.ell_matvec
+        acc = jnp.zeros(u.shape, u.dtype)
+        for t, payload in enumerate(plan.stream("both")):
+            for s in range(m):
+                z = op(payload["dataT"][s], payload["colsT"][s], u)
+                acc = acc + op(payload["data"][s], payload["cols"][s], z,
+                               self._slab(coeffs, s, t))
+        return acc
+
+    def _stream_margins_samples(self, w):
+        """DiSCO-S margins: one 'tr' pass, each chunk emitting its slab
+        of the permuted ``(n_padded,)`` margin vector."""
+        from repro.kernels import ops as kops
+
+        plan, m = self._plan, self.m
+        parts = [[None] * plan.n_steps for _ in range(m)]
+        for t, payload in enumerate(plan.stream("tr")):
+            for s in range(m):
+                parts[s][t] = kops.ell_matvec(payload["dataT"][s],
+                                              payload["colsT"][s], w)
+        return jnp.concatenate([jnp.concatenate(parts[s])
+                                for s in range(m)])
+
+    def _stream_grad_samples(self, d1):
+        """DiSCO-S gradient accumulation: one 'fwd' pass of
+        ``sum_t X_t d1_t`` (the cross-shard reduce is the accumulation)."""
+        from repro.kernels import ops as kops
+
+        plan, m = self._plan, self.m
+        acc = jnp.zeros((self.d_padded,), d1.dtype)
+        for t, payload in enumerate(plan.stream("fwd")):
+            for s in range(m):
+                acc = acc + kops.ell_matvec(payload["data"][s],
+                                            payload["cols"][s],
+                                            self._slab(d1, s, t))
+        return acc
+
+    def _build_step_streaming(self):
+        """Host-driven outer step: same math as the in-memory sparse
+        step, with every X product replaced by a prefetched chunk scan
+        and the PCG loop run by :func:`repro.core.pcg.pcg_streamed`."""
+        from repro.core.pcg import pcg_streamed
+
+        cfg, loss = self.cfg, self.loss
+        n, tau, m = self.n, self.tau, self.m
+        lam, frac = cfg.lam, cfg.hessian_subsample
+        width = self._plan.width_local
+
+        if cfg.partition == "features":
+            def step(w, key):
+                margins = self._stream_xt(w)                  # (n_padded,)
+                d1 = loss.d1(margins, self.y) * self.smask
+                c = loss.d2(margins, self.y) * self.smask
+                g = self._stream_x(d1) / n + lam * w
+                gnorm = jnp.sqrt(jnp.vdot(g, g))
+                fval = jnp.sum(loss.value(margins, self.y)
+                               * self.smask) / n \
+                    + 0.5 * lam * jnp.vdot(w, w)
+                if frac < 1.0:
+                    mask = jax.random.bernoulli(key, frac, margins.shape)
+                    c_eff = c * mask / frac
+                else:
+                    c_eff = c
+                coeffs_tau = loss.d2(margins[:tau], self.y_tau)
+
+                if cfg.precond == "woodbury":
+                    from repro.core.preconditioner import \
+                        WoodburyPreconditioner
+                    blocks = [WoodburyPreconditioner.build_blockdiag(
+                        self.X_tau[s], coeffs_tau, lam, cfg.mu)
+                        for s in range(m)]
+
+                    def apply_precond(r):
+                        return jnp.concatenate(
+                            [blocks[s].apply_inv(
+                                r[s * width:(s + 1) * width])
+                             for s in range(m)])
+                elif cfg.precond == "none":
+                    apply_precond = lambda r: r
+                else:
+                    raise ValueError(
+                        f"unknown precond {cfg.precond!r} for streaming "
+                        "DiSCO-F")
+
+                def hvp(u):
+                    z = self._stream_xt(u)
+                    return self._stream_x(z, coeffs=c_eff) / n + lam * u
+
+                def hvp_multi(U):
+                    Z = self._stream_xt(U, multi=True)
+                    return self._stream_x(Z, coeffs=c_eff, multi=True) \
+                        / n + lam * U
+
+                def basis_op(u):
+                    z_loc = self._stream_xt(u, local=True)    # no reduce
+                    return self._stream_x(z_loc, coeffs=c_eff,
+                                          local=True) / n + lam * u
+
+                eps = cfg.pcg_rel_tol * gnorm
+                res = pcg_streamed(hvp, apply_precond, g, eps,
+                                   cfg.max_pcg, block_s=cfg.pcg_block_s,
+                                   hvp_multi=hvp_multi, basis_op=basis_op,
+                                   variant="features")
+                w_new = w - res.v / (1.0 + res.delta)
+                stats = dict(grad_norm=gnorm, f=fval, pcg_iters=res.iters,
+                             delta=res.delta, pcg_r_norm=res.r_norm)
+                return w_new, stats
+
+        else:  # samples
+            def step(w, key):
+                margins = self._stream_margins_samples(w)    # permuted (n_p,)
+                d1 = loss.d1(margins, self.y) * self.weights
+                c = loss.d2(margins, self.y) * self.weights
+                g = self._stream_grad_samples(d1) / n + lam * w
+                gnorm = jnp.sqrt(jnp.vdot(g, g))
+                fval = jnp.sum(loss.value(margins, self.y)
+                               * self.weights) / n \
+                    + 0.5 * lam * jnp.vdot(w, w)
+                if frac < 1.0:
+                    # identical per-shard draws as the in-memory
+                    # _shard_subsample_mask (key folded with shard index)
+                    mask = jnp.concatenate(
+                        [jax.random.bernoulli(
+                            jax.random.fold_in(key, s), frac, (width,))
+                         for s in range(m)])
+                    c_eff = c * mask / frac
+                else:
+                    c_eff = c
+                coeffs_tau = loss.d2(self.X_tau.T @ w, self.y_tau)
+
+                from repro.core.pcg import _samples_precond
+                apply_precond = _samples_precond(
+                    cfg.precond, self.X_tau, coeffs_tau, lam, cfg.mu,
+                    cfg.sag_epochs)
+
+                def hvp(u):
+                    return self._stream_hvp_samples(u, c_eff) / n \
+                        + lam * u
+
+                def hvp_multi(U):
+                    return self._stream_hvp_samples(U, c_eff, multi=True) \
+                        / n + lam * U
+
+                if m == 1:
+                    basis_op = hvp            # exact single-shard operator
+                else:
+                    tau_f = jnp.asarray(tau, self.X_tau.dtype)
+
+                    def basis_op(u):
+                        return self.X_tau @ (coeffs_tau
+                                             * (self.X_tau.T @ u)) \
+                            / tau_f + lam * u
+
+                eps = cfg.pcg_rel_tol * gnorm
+                res = pcg_streamed(hvp, apply_precond, g, eps,
+                                   cfg.max_pcg, block_s=cfg.pcg_block_s,
+                                   hvp_multi=hvp_multi, basis_op=basis_op,
+                                   variant="samples")
+                w_new = w - res.v / (1.0 + res.delta)
+                stats = dict(grad_norm=gnorm, f=fval, pcg_iters=res.iters,
+                             delta=res.delta, pcg_r_norm=res.r_norm)
+                return w_new, stats
+
+        return step
+
+    # ------------------------------------------------------------------
     def _comm_costs(self, pcg_iters: int) -> tuple[int, int, int]:
         """``pcg_iters`` is PCG iterations for the classic path and *rounds*
         (each worth ``pcg_block_s`` iterations) for the s-step path."""
@@ -525,7 +893,10 @@ class DiscoSolver:
         permutation is applied/undone here.
         """
         cfg = self.cfg
-        dtype = self.ell_data.dtype if self._sparse else self.X.dtype
+        if self._streaming:
+            dtype = self._plan.store.dtype
+        else:
+            dtype = self.ell_data.dtype if self._sparse else self.X.dtype
         if w0 is None:
             w = jnp.zeros(self._w_shape, dtype)
         else:
@@ -560,10 +931,18 @@ class DiscoSolver:
             w_full[self._part.perm[valid]] = w_np[valid]
         else:
             w_full = np.asarray(w)[: self.d]
+        stream_stats = None
+        if self._streaming:
+            st = self._plan.stats
+            stream_stats = dict(passes=st.passes, steps=st.steps,
+                                bytes_loaded=st.bytes_loaded,
+                                peak_bytes=st.peak_bytes,
+                                max_step_bytes=st.max_step_bytes)
         return DiscoResult(w=w_full, history=history, ledger=ledger,
                            converged=converged,
                            partition_info=(self._part.stats()
-                                           if self._part else None))
+                                           if self._part else None),
+                           stream_stats=stream_stats)
 
 
 def disco_fit(X, y, cfg: DiscoConfig | None = None, mesh: Mesh | None = None,
@@ -585,3 +964,27 @@ def disco_fit(X, y, cfg: DiscoConfig | None = None, mesh: Mesh | None = None,
     """
     cfg = cfg or DiscoConfig()
     return DiscoSolver(X, y, cfg, mesh=mesh).fit(w0)
+
+
+def disco_fit_streaming(X, y, store_path: str,
+                        cfg: DiscoConfig | None = None,
+                        mesh: Mesh | None = None,
+                        w0: np.ndarray | None = None) -> DiscoResult:
+    """Out-of-core convenience wrapper: convert once, then stream.
+
+    Converts ``(X, y)`` (a :class:`repro.data.sparse.CSRMatrix` +
+    labels) into a :class:`repro.data.store.ShardStore` at
+    ``store_path`` — chunked along ``cfg.partition`` with
+    ``cfg.stream_chunk_size`` indices per chunk — and fits with
+    :meth:`DiscoSolver.from_store`, whose peak data-plane memory is
+    bounded by chunk size x ``cfg.prefetch_depth``, not dataset size
+    (docs/streaming.md). Reuse an existing store directory directly via
+    ``DiscoSolver.from_store(ShardStore(path), cfg)`` to skip the
+    conversion.
+    """
+    from repro.data.store import ShardStore
+
+    cfg = cfg or DiscoConfig()
+    store = ShardStore.from_csr(X, y, store_path, axis=cfg.partition,
+                                chunk_size=cfg.stream_chunk_size)
+    return DiscoSolver.from_store(store, cfg, mesh=mesh).fit(w0)

@@ -561,13 +561,126 @@ def pcg_features(X_loc, coeffs, n_global, lam, g_loc, eps, max_iter,
         return G, B, b
 
     def update_scales(scales, B):
-        # s >= 2 here (block_s > 1), so there is always at least one ratio
-        dgn = jnp.sqrt(jnp.maximum(jnp.diagonal(B)[:s], 1e-30))
-        ratios = dgn[1:] / jnp.maximum(dgn[:-1], 1e-30)
-        # overflowed diag(B) entries give inf/inf = NaN, which clip would
-        # propagate forever — treat them as "no information" instead
-        ratios = jnp.where(jnp.isfinite(ratios), ratios, 1.0)
-        return jnp.clip(scales * ratios, 1e-6, 1e6)
+        return _feature_scales_update(scales, B, s)
 
     return _sstep_loop(build_basis, hvp_round, gram, update_scales,
                        psum_dot, g_loc, eps, max_iter, s)
+
+
+def _feature_scales_update(scales, B, s):
+    """Next-round Krylov column scale estimates from diag(B) (DiSCO-F).
+
+    s >= 2 here (block_s > 1), so there is always at least one ratio.
+    Overflowed diag(B) entries give inf/inf = NaN, which clip would
+    propagate forever — treat them as "no information" instead. Shared
+    by the in-memory s-step loop and the host-driven streamed loop so
+    both trajectories are identical.
+    """
+    dgn = jnp.sqrt(jnp.maximum(jnp.diagonal(B)[:s], 1e-30))
+    ratios = dgn[1:] / jnp.maximum(dgn[:-1], 1e-30)
+    ratios = jnp.where(jnp.isfinite(ratios), ratios, 1.0)
+    return jnp.clip(scales * ratios, 1e-6, 1e6)
+
+
+# ---------------------------------------------------------------------------
+# host-driven streamed PCG (out-of-core data plane, docs/streaming.md)
+# ---------------------------------------------------------------------------
+
+def pcg_streamed(hvp, apply_precond, g, eps, max_iter, *, block_s=1,
+                 hvp_multi=None, basis_op=None, variant="features"):
+    """Host-driven PCG over a *streamed* Hessian operator.
+
+    The in-memory loops (:func:`_pcg_loop` / :func:`_sstep_loop`) trace
+    into one ``lax.while_loop`` with the data resident in device memory;
+    an out-of-core solve applies ``H`` by scanning disk-backed chunk
+    tiles (:mod:`repro.data.stream`), which cannot live inside a traced
+    loop — so this twin runs the *identical recurrences* as a host loop
+    around streaming callables:
+
+    hvp(u)        -> H u        (streams the shard chunks internally)
+    hvp_multi(U)  -> H U        (batched; one chunk read serves all
+                   columns — the s-step x streaming synergy: ``s`` Krylov
+                   dimensions per data pass instead of one)
+    basis_op(u)   -> H~ u       zero-communication basis operator of the
+                   s-step engine (the streamed block-diagonal local
+                   Hessian for 'features', the resident tau-sample
+                   estimate for 'samples')
+    apply_precond, g: as in the in-memory twins, over *global* flat
+                   vectors (the permuted padded axis), where every dot is
+                   a plain ``jnp.vdot`` — the cross-shard reduction is
+                   already folded into the chunk accumulation.
+
+    ``variant`` mirrors the two in-memory s-step wirings: 'features'
+    keeps unnormalized scale-managed Krylov columns and splices the
+    carried ``H p_prev``; 'samples' MGS-orthonormalizes the replicated
+    basis and batches all ``s + 1`` columns. Returns :class:`PCGResult`
+    with the same fields/semantics as the in-memory paths.
+    """
+    eps = float(eps)
+    v = jnp.zeros_like(g)
+    r = g
+    Hv = jnp.zeros_like(g)
+
+    def rnorm(x):
+        return float(jnp.sqrt(jnp.vdot(x, x)))
+
+    if block_s <= 1:
+        s_vec = apply_precond(r)
+        u = s_vec
+        rs = jnp.vdot(r, s_vec)
+        t = 0
+        while t < max_iter and rnorm(r) > eps:
+            Hu = hvp(u)
+            alpha = rs / jnp.vdot(u, Hu)
+            v = v + alpha * u
+            Hv = Hv + alpha * Hu
+            r = r - alpha * Hu
+            s_new = apply_precond(r)
+            rs_new = jnp.vdot(r, s_new)
+            beta = rs_new / rs
+            u = s_new + beta * u
+            rs = rs_new
+            t += 1
+    else:
+        if hvp_multi is None or basis_op is None:
+            raise ValueError("streamed s-step PCG (block_s > 1) needs "
+                             "both hvp_multi (the batched streamed HVP) "
+                             "and basis_op (the zero-communication basis "
+                             "operator)")
+        s = int(block_s)
+        p = jnp.zeros_like(g)
+        Hp = jnp.zeros_like(g)
+        scales = jnp.ones((max(s - 1, 1),), g.dtype)
+        t = 0
+        while t < max_iter and rnorm(r) > eps:
+            if variant == "samples":
+                cols = _krylov_columns(r, apply_precond, basis_op, s,
+                                       jnp.ones((max(s - 1, 1),), r.dtype))
+                cols.append(p)
+                U = jnp.stack(_mgs(cols), axis=1)
+                W = hvp_multi(U)
+            elif variant == "features":
+                cols = _krylov_columns(r, apply_precond, basis_op, s,
+                                       scales)
+                cols.append(p)
+                U = jnp.stack(cols, axis=1)
+                Wk = hvp_multi(U[:, :s])
+                W = jnp.concatenate([Wk, Hp[:, None]], axis=1)
+            else:
+                raise ValueError(f"unknown streamed variant {variant!r}")
+            G, B, b = U.T @ W, U.T @ U, U.T @ r
+            a = _solve_round(G, B, b, s)
+            dv = U @ a
+            Hdv = W @ a
+            v = v + dv
+            r = r - Hdv
+            p, Hp = dv, Hdv
+            Hv = Hv + Hdv
+            if variant == "features":
+                scales = _feature_scales_update(scales, B, s)
+            t += 1
+
+    delta = jnp.sqrt(jnp.maximum(jnp.vdot(v, Hv), 0.0))
+    r_norm = jnp.sqrt(jnp.vdot(r, r))
+    return PCGResult(v=v, delta=delta,
+                     iters=jnp.asarray(t, jnp.int32), r_norm=r_norm)

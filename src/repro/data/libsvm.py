@@ -2,48 +2,34 @@
 
 Dense materialization — intended for the laptop-scale reproductions, not the
 273 GB splice-site original (see DESIGN.md §6: scale-free claims are
-reproduced on synthetic regime-matched data).
+reproduced on synthetic regime-matched data; docs/streaming.md covers the
+out-of-core path for data beyond RAM).
 """
 from __future__ import annotations
 
 import numpy as np
+
+from repro.data.sparse import load_libsvm_sparse
 
 
 def load_libsvm(path: str, n_features: int | None = None, dtype=np.float32):
     """Return X (d, n), y (n,) — note the paper's feature-major convention.
 
     An explicit ``n_features`` fixes the feature dimension: indices beyond
-    it are *truncated* (dropped, the standard libsvm-reader convention)
-    rather than written out of the intended range; a larger value pads
-    with empty features. Without it, ``d`` is the max index seen.
+    it are *truncated* (dropped, the standard libsvm-reader convention —
+    the shared :func:`repro.data.sparse.truncate_features` clamp) rather
+    than written out of the intended range; a larger value pads with
+    empty features. Without it, ``d`` is the max index seen.
 
-    For sparse datasets prefer the streaming, bounded-memory
-    :func:`repro.data.sparse.load_libsvm_sparse`, which shares these
-    semantics.
+    This is the dense materialization of
+    :func:`repro.data.sparse.load_libsvm_sparse` (one parser, one clamp,
+    identical semantics — the tests/test_data.py property test holds the
+    equivalence). Prefer the sparse reader directly for sparse datasets,
+    or :meth:`repro.data.store.ShardStore.from_libsvm` for out-of-core
+    solves.
     """
-    rows, ys = [], []
-    max_feat = 0
-    with open(path) as f:
-        for line in f:
-            parts = line.split()
-            if not parts:
-                continue
-            ys.append(float(parts[0]))
-            feats = {}
-            for tok in parts[1:]:
-                idx, val = tok.split(":")
-                idx = int(idx)
-                feats[idx] = float(val)
-                max_feat = max(max_feat, idx)
-            rows.append(feats)
-    d = n_features if n_features is not None else max_feat
-    n = len(rows)
-    X = np.zeros((d, n), dtype=dtype)
-    for j, feats in enumerate(rows):
-        for idx, val in feats.items():
-            if idx <= d:             # truncate explicit out-of-range feats
-                X[idx - 1, j] = val  # libsvm indices are 1-based
-    return X, np.asarray(ys, dtype=dtype)
+    X, y = load_libsvm_sparse(path, n_features=n_features, dtype=dtype)
+    return X.todense(), y
 
 
 def save_libsvm(path: str, X: np.ndarray, y: np.ndarray):

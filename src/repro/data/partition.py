@@ -105,6 +105,47 @@ def equal_width_partition(nnz_counts, m: int, block: int = 1,
                      n_items=len(nnz_counts), m=m, strategy="width")
 
 
+def _lpt_assign(block_nnz: np.ndarray, m: int
+                ) -> tuple[np.ndarray, np.ndarray]:
+    """Greedy capacity-constrained LPT over per-block nnz.
+
+    Blocks sorted by nnz descending (stable), each placed on the
+    currently lightest shard that still has capacity (every shard takes
+    exactly ``len(block_nnz) / m`` blocks). Returns ``(assign, load)``:
+    the shard of each block and the per-shard nnz totals. Shared by the
+    index-granular :func:`lpt_partition` and the chunk-granular
+    :func:`chunk_partition`, so a store-planned solve reproduces the
+    in-memory assignment bit for bit.
+    """
+    n_blocks = len(block_nnz)
+    cap = n_blocks // m
+    order = np.argsort(-block_nnz, kind="stable")
+    load = np.zeros(m, np.int64)
+    used = np.zeros(m, np.int64)
+    assign = np.empty(n_blocks, np.int64)
+    for b in order:
+        open_shards = np.nonzero(used < cap)[0]
+        s = open_shards[np.argmin(load[open_shards])]
+        assign[b] = s
+        load[s] += block_nnz[b]
+        used[s] += 1
+    return assign, load
+
+
+def _perm_from_assign(assign: np.ndarray, block: int, m: int
+                      ) -> np.ndarray:
+    """Index permutation realizing a block->shard assignment: shard s's
+    blocks in ascending block order (deterministic, cache-friendly), each
+    expanded to its ``block`` contiguous indices."""
+    perm = np.empty(len(assign) * block, np.int64)
+    pos = 0
+    for s in range(m):
+        for b in np.nonzero(assign == s)[0]:
+            perm[pos:pos + block] = np.arange(b * block, (b + 1) * block)
+            pos += block
+    return perm
+
+
 def lpt_partition(nnz_counts, m: int, block: int = 1,
                   pad_multiple: int = 1) -> Partition:
     """Capacity-constrained LPT: balance shard nnz at equal shard width.
@@ -122,32 +163,50 @@ def lpt_partition(nnz_counts, m: int, block: int = 1,
     nnz_counts = np.asarray(nnz_counts, np.int64)
     padded, n_padded = _padded_counts(nnz_counts, m, block, pad_multiple)
     block_nnz = padded.reshape(-1, block).sum(axis=1)
-    n_blocks = len(block_nnz)
-    cap = n_blocks // m
-
-    order = np.argsort(-block_nnz, kind="stable")
-    load = np.zeros(m, np.int64)
-    used = np.zeros(m, np.int64)
-    assign = np.empty(n_blocks, np.int64)
-    for b in order:
-        open_shards = np.nonzero(used < cap)[0]
-        s = open_shards[np.argmin(load[open_shards])]
-        assign[b] = s
-        load[s] += block_nnz[b]
-        used[s] += 1
-
-    # build the permutation: shard s's blocks, in ascending block order so
-    # the within-shard layout stays deterministic and cache-friendly
-    perm = np.empty(n_padded, np.int64)
-    pos = 0
-    for s in range(m):
-        for b in np.nonzero(assign == s)[0]:
-            perm[pos:pos + block] = np.arange(b * block, (b + 1) * block)
-            pos += block
+    assign, load = _lpt_assign(block_nnz, m)
+    perm = _perm_from_assign(assign, block, m)
     inv = np.empty_like(perm)
     inv[perm] = np.arange(n_padded)
     return Partition(perm=perm, inv=inv, shard_nnz=load,
                      n_items=len(nnz_counts), m=m, strategy="lpt")
+
+
+def chunk_partition(chunk_nnz, chunk_size: int, n_items: int, m: int,
+                    strategy: str = "lpt") -> Partition:
+    """Partition fixed-width *chunks* across ``m`` shards from nnz stats.
+
+    The streaming planner's entry point: ``chunk_nnz`` comes straight
+    from a :class:`repro.data.store.ShardStore` header, so a balanced
+    assignment is computed **without reading any chunk values**. Chunk
+    ``c`` covers indices ``[c * chunk_size, (c+1) * chunk_size)`` of the
+    chunked axis (the final real chunk may be ragged — its synthetic
+    tail indices are ``>= n_items`` and carry no nnz); the chunk list is
+    padded with empty chunks to a multiple of ``m``.
+
+    Produces the identical :class:`Partition` (permutation, shard_nnz,
+    imbalance) as ``lpt_partition(per_index_counts, m,
+    block=chunk_size, pad_multiple=p)`` for any ``p`` dividing
+    ``chunk_size`` — the equivalence that lets the streaming solver and
+    the in-memory solver (``DiscoConfig.partition_block=chunk_size``)
+    share one data layout.
+    """
+    chunk_nnz = np.asarray(chunk_nnz, np.int64)
+    n_chunks = len(chunk_nnz)
+    n_chunks_padded = -(-max(n_chunks, 1) // m) * m
+    block_nnz = np.zeros(n_chunks_padded, np.int64)
+    block_nnz[:n_chunks] = chunk_nnz
+    if strategy == "lpt":
+        assign, load = _lpt_assign(block_nnz, m)
+        perm = _perm_from_assign(assign, chunk_size, m)
+    elif strategy == "width":
+        perm = np.arange(n_chunks_padded * chunk_size, dtype=np.int64)
+        load = block_nnz.reshape(m, -1).sum(axis=1)
+    else:
+        raise ValueError(f"unknown partition strategy {strategy!r}")
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(len(perm))
+    return Partition(perm=perm, inv=inv, shard_nnz=load,
+                     n_items=int(n_items), m=m, strategy=strategy)
 
 
 def make_partition(X: CSRMatrix, axis: str, m: int, strategy: str = "lpt",

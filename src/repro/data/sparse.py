@@ -251,6 +251,51 @@ def ell_from_csr(csr: CSRMatrix, block_rows: int, block_cols: int,
     return BlockedEll(data=data, cols=cols, shape=(d, n), block=(br, bc))
 
 
+def ell_tile_widths(csr: CSRMatrix, block_rows: int, block_cols: int
+                    ) -> tuple[int, int]:
+    """Natural blocked-ELL widths of a matrix, forward and transposed.
+
+    Returns ``(w_fwd, w_tr)`` — the max surviving tiles per row-block of
+    ``ell_from_csr(csr, block_rows, block_cols)`` and of
+    ``ell_from_csr(csr.T, block_cols, block_rows)`` — computed from the
+    index structure alone (no tile data is built). The streaming planner
+    (:mod:`repro.data.stream`) uses this to fix the global padded widths
+    of every chunk before any chunk values are read; both results are at
+    least 1 (the zero-tile floor ``ell_from_csr`` also applies).
+    """
+    nrb = -(-csr.shape[0] // block_rows)
+    ncb = max(-(-csr.shape[1] // block_cols), 1)
+    rows = np.repeat(np.arange(csr.shape[0]), np.diff(csr.indptr))
+    rb = rows // block_rows
+    cb = np.asarray(csr.indices, np.int64) // block_cols
+    uniq = np.unique(rb.astype(np.int64) * ncb + cb)
+    if not len(uniq):
+        return 1, 1
+    w_fwd = int(np.bincount(uniq // ncb, minlength=max(nrb, 1)).max())
+    w_tr = int(np.bincount(uniq % ncb, minlength=ncb).max())
+    return max(w_fwd, 1), max(w_tr, 1)
+
+
+def pad_csr_rows(csr: CSRMatrix, n_rows: int) -> CSRMatrix:
+    """Extend a CSR slab with trailing empty rows up to ``n_rows``.
+
+    How a ragged final store chunk (:mod:`repro.data.store`) is brought
+    to the uniform ``chunk_size`` width the streaming pipeline's static
+    shapes require; a no-op when the slab is already full-width.
+    """
+    have = csr.shape[0]
+    if have == n_rows:
+        return csr
+    if have > n_rows:
+        raise ValueError(f"cannot pad {have} rows down to {n_rows}")
+    indptr = np.concatenate(
+        [np.asarray(csr.indptr, np.int64),
+         np.full(n_rows - have, int(csr.indptr[-1]), np.int64)])
+    return CSRMatrix(indptr=indptr, indices=np.asarray(csr.indices),
+                     data=np.asarray(csr.data),
+                     shape=(n_rows, csr.shape[1]))
+
+
 class EllPair(NamedTuple):
     """Device-side sparse shard operand (a jax pytree of four arrays).
 
@@ -352,15 +397,41 @@ def build_shard_ell_pairs(shard_csrs: list[CSRMatrix], block_rows: int,
 # streaming libsvm reader (bounded memory)
 # ---------------------------------------------------------------------------
 
+def truncate_features(fi: np.ndarray, si: np.ndarray, vs: np.ndarray,
+                      n_features: int
+                      ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Drop COO triplets whose 0-based feature index is ``>= n_features``.
+
+    The single source of the explicit-``n_features`` *truncation*
+    semantics every libsvm reader in the repo shares
+    (:func:`repro.data.libsvm.load_libsvm`, :func:`load_libsvm_sparse`,
+    :func:`iter_libsvm_chunks`): a requested feature dimension smaller
+    than the max index seen drops the out-of-range features — the
+    standard libsvm-reader convention — rather than writing out of the
+    intended range. No-op (same arrays back) when nothing is out of
+    range.
+    """
+    keep = fi < n_features
+    if bool(keep.all()):
+        return fi, si, vs
+    return fi[keep], si[keep], vs[keep]
+
+
 def iter_libsvm_chunks(path: str, chunk_samples: int = 8192,
-                       dtype=np.float32
+                       dtype=np.float32, n_features: int | None = None
                        ) -> Iterator[tuple[np.ndarray, np.ndarray,
                                            np.ndarray, np.ndarray]]:
     """Yield ``(feat_idx, sample_idx, vals, labels)`` COO chunks.
 
     Feature indices are converted to 0-based. ``sample_idx`` is global
     (monotone across chunks). Peak memory is O(chunk nnz), independent of
-    the file size — the building block of :func:`load_libsvm_sparse`.
+    the file size — the building block of :func:`load_libsvm_sparse` and
+    :class:`repro.data.store.ShardStore`.
+
+    An explicit ``n_features`` applies the shared
+    :func:`truncate_features` clamp to every chunk (features at index
+    ``>= n_features`` are dropped), matching the
+    ``load_libsvm`` / ``load_libsvm_sparse`` truncation semantics.
     """
     fi: list[int] = []
     si: list[int] = []
@@ -369,8 +440,11 @@ def iter_libsvm_chunks(path: str, chunk_samples: int = 8192,
     base = 0
 
     def flush():
-        return (np.asarray(fi, np.int64), np.asarray(si, np.int64),
-                np.asarray(vs, dtype), np.asarray(ys, dtype))
+        f, s, v = (np.asarray(fi, np.int64), np.asarray(si, np.int64),
+                   np.asarray(vs, dtype))
+        if n_features is not None:
+            f, s, v = truncate_features(f, s, v, n_features)
+        return f, s, v, np.asarray(ys, dtype)
 
     n_in_chunk = 0
     with open(path) as f:
@@ -402,14 +476,16 @@ def load_libsvm_sparse(path: str, n_features: int | None = None,
 
     Reads the file in ``chunk_samples``-sized chunks, accumulating COO
     triplets — peak memory O(nnz + chunk), never the dense ``d * n``.
-    Matches :func:`repro.data.libsvm.load_libsvm` semantics: an explicit
-    ``n_features`` smaller than the max seen index *truncates* (features
-    beyond the range are dropped), larger pads with empty features.
+    Matches :func:`repro.data.libsvm.load_libsvm` semantics via the
+    shared :func:`truncate_features` clamp: an explicit ``n_features``
+    smaller than the max seen index *truncates* (features beyond the
+    range are dropped, per chunk), larger pads with empty features.
     """
     fparts, sparts, vparts, yparts = [], [], [], []
     max_feat = -1
     n = 0
-    for fi, si, vs, ys in iter_libsvm_chunks(path, chunk_samples, dtype):
+    for fi, si, vs, ys in iter_libsvm_chunks(path, chunk_samples, dtype,
+                                             n_features=n_features):
         if len(fi):
             max_feat = max(max_feat, int(fi.max()))
         fparts.append(fi)
@@ -422,9 +498,6 @@ def load_libsvm_sparse(path: str, n_features: int | None = None,
     vs = np.concatenate(vparts) if vparts else np.zeros(0, dtype)
     y = np.concatenate(yparts) if yparts else np.zeros(0, dtype)
     d = n_features if n_features is not None else max_feat + 1
-    keep = fi < d
-    if not keep.all():
-        fi, si, vs = fi[keep], si[keep], vs[keep]
     return CSRMatrix.from_coo(fi, si, vs, (d, n), dtype=dtype), y
 
 

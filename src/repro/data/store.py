@@ -1,0 +1,282 @@
+"""Out-of-core shard store: the on-disk chunk format streaming DiSCO runs on.
+
+The paper's headline experiment minimizes a regularized loss over a
+**273 GB** dataset — far beyond device (and usually host) memory. Every
+in-memory path in this repo needs the full ``(d, n)`` matrix resident
+before ``DiscoSolver`` can take a step; this module is the storage half
+of the out-of-core subsystem (docs/streaming.md) that bounds peak memory
+by *chunk size* instead of *dataset size*:
+
+* A dataset is converted **once** — from libsvm text via the streaming
+  :func:`repro.data.sparse.iter_libsvm_chunks` reader, or from an
+  in-memory :class:`repro.data.sparse.CSRMatrix` — into a directory of
+  fixed-width CSR **chunks**: contiguous slabs of ``chunk_size`` indices
+  along one axis (features for DiSCO-F, samples for DiSCO-S), each
+  stored as three memory-mappable ``.npy`` arrays
+  (``indptr``/``indices``/``data``).
+* ``meta.json`` is the nnz-stats header: per-chunk ``(start, stop,
+  nnz)`` plus shape/dtype/version. The nnz-aware LPT partitioner
+  (:func:`repro.data.partition.chunk_partition`) assigns whole chunks to
+  shards from this header alone — **no chunk values are read** to plan a
+  balanced solve.
+* Chunks are random-access (`numpy` memmaps), so the prefetch pipeline
+  (:mod:`repro.data.stream`) can walk them in any schedule order with
+  O(chunk) peak memory.
+
+Chunk CSR convention: rows are always the **chunked axis** (features for
+an ``axis='features'`` store, samples for ``axis='samples'``), columns
+the other axis — so a chunk of either store is a ``(chunk_width,
+other_dim)`` CSR slab and the two axes are handled symmetrically.
+``to_csr()`` reassembles the canonical feature-major ``(d, n)``
+:class:`CSRMatrix` either way (tests / small data).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+from repro.data.sparse import CSRMatrix, iter_libsvm_chunks
+
+STORE_VERSION = 1
+_META = "meta.json"
+_LABELS = "labels.npy"
+_CHUNK_DIR = "chunks"
+_FIELDS = ("indptr", "indices", "data")
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkInfo:
+    """Header entry of one chunk: its index range and nonzero count."""
+
+    index: int   # chunk id (position along the chunked axis)
+    start: int   # first covered index (inclusive)
+    stop: int    # last covered index (exclusive; ragged final chunk ok)
+    nnz: int     # stored nonzeros — what the LPT planner balances on
+
+
+def _chunk_path(root: str, i: int, field: str) -> str:
+    return os.path.join(root, _CHUNK_DIR, f"{i:06d}.{field}.npy")
+
+
+def _write_chunk(root: str, i: int, indptr, indices, data):
+    np.save(_chunk_path(root, i, "indptr"), np.asarray(indptr, np.int64))
+    np.save(_chunk_path(root, i, "indices"),
+            np.asarray(indices, np.int32))
+    np.save(_chunk_path(root, i, "data"), np.asarray(data))
+
+
+class ShardStore:
+    """A chunked, memory-mappable on-disk sparse dataset (+ labels).
+
+    Open an existing store with ``ShardStore(path)``; build one with
+    :meth:`from_csr` or :meth:`from_libsvm`. All reads go through
+    ``np.load(..., mmap_mode='r')`` so touching a chunk costs page-ins
+    proportional to that chunk's nnz, never the dataset.
+
+    Attributes:
+        path: store directory.
+        axis: ``'features'`` | ``'samples'`` — the chunked axis.
+        shape: logical feature-major ``(d, n)`` of the full dataset.
+        dtype: value dtype of the stored nonzeros.
+        chunk_size: indices per chunk along ``axis`` (the final chunk may
+            be ragged).
+        chunks: list of :class:`ChunkInfo` (the nnz-stats header).
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+        with open(os.path.join(path, _META)) as f:
+            meta = json.load(f)
+        if meta.get("version") != STORE_VERSION:
+            raise ValueError(
+                f"store {path!r} has version {meta.get('version')!r}; "
+                f"this reader supports version {STORE_VERSION}")
+        self.axis: str = meta["axis"]
+        self.shape: tuple[int, int] = tuple(meta["shape"])
+        self.dtype = np.dtype(meta["dtype"])
+        self.chunk_size: int = int(meta["chunk_size"])
+        self.chunks: list[ChunkInfo] = [
+            ChunkInfo(index=i, start=int(c["start"]), stop=int(c["stop"]),
+                      nnz=int(c["nnz"]))
+            for i, c in enumerate(meta["chunks"])]
+
+    # -- header views ------------------------------------------------------
+    @property
+    def n_chunks(self) -> int:
+        """Number of stored chunks."""
+        return len(self.chunks)
+
+    @property
+    def n_items(self) -> int:
+        """Length of the chunked axis (d for 'features', n for 'samples')."""
+        return self.shape[0] if self.axis == "features" else self.shape[1]
+
+    @property
+    def other_dim(self) -> int:
+        """Length of the non-chunked axis."""
+        return self.shape[1] if self.axis == "features" else self.shape[0]
+
+    @property
+    def chunk_nnz(self) -> np.ndarray:
+        """(n_chunks,) per-chunk nonzero counts — the partitioner's input."""
+        return np.array([c.nnz for c in self.chunks], np.int64)
+
+    @property
+    def nnz(self) -> int:
+        """Total stored nonzeros."""
+        return int(self.chunk_nnz.sum()) if self.chunks else 0
+
+    def data_bytes(self) -> int:
+        """On-disk bytes of the chunk payload (indptr + indices + data)."""
+        total = 0
+        for c in self.chunks:
+            width = c.stop - c.start
+            total += (width + 1) * 8 + c.nnz * (4 + self.dtype.itemsize)
+        return total
+
+    # -- chunk access ------------------------------------------------------
+    def chunk_csr(self, i: int, mmap: bool = True) -> CSRMatrix:
+        """CSR slab of chunk ``i``: rows are the chunked axis indices
+        ``[start, stop)``, columns the full other axis. Arrays are
+        memmaps when ``mmap`` (the default) — slicing them pages in only
+        the touched bytes."""
+        info = self.chunks[i]
+        mode = "r" if mmap else None
+        indptr = np.load(_chunk_path(self.path, i, "indptr"),
+                         mmap_mode=mode)
+        indices = np.load(_chunk_path(self.path, i, "indices"),
+                          mmap_mode=mode)
+        data = np.load(_chunk_path(self.path, i, "data"), mmap_mode=mode)
+        return CSRMatrix(indptr=indptr, indices=indices, data=data,
+                         shape=(info.stop - info.start, self.other_dim))
+
+    def labels(self, mmap: bool = True) -> np.ndarray:
+        """(n,) labels, memory-mapped by default."""
+        return np.load(os.path.join(self.path, _LABELS),
+                       mmap_mode="r" if mmap else None)
+
+    def to_csr(self) -> tuple[CSRMatrix, np.ndarray]:
+        """Reassemble the full feature-major ``(d, n)`` CSR + labels.
+
+        O(nnz) host memory — the in-memory escape hatch (tests, small
+        data, building a dense baseline for a streaming solve).
+        """
+        d, n = self.shape
+        axis_dim = self.n_items
+        indptr = np.zeros(axis_dim + 1, np.int64)
+        ind_parts, val_parts = [], []
+        for c in self.chunks:
+            slab = self.chunk_csr(c.index)
+            counts = np.diff(np.asarray(slab.indptr))
+            indptr[c.start + 1: c.stop + 1] = counts
+            ind_parts.append(np.asarray(slab.indices))
+            val_parts.append(np.asarray(slab.data))
+        np.cumsum(indptr, out=indptr)
+        indices = (np.concatenate(ind_parts) if ind_parts
+                   else np.zeros(0, np.int32))
+        values = (np.concatenate(val_parts) if val_parts
+                  else np.zeros(0, self.dtype))
+        axis_csr = CSRMatrix(indptr=indptr, indices=indices, data=values,
+                             shape=(axis_dim, self.other_dim))
+        X = axis_csr if self.axis == "features" else axis_csr.transpose()
+        return X, np.asarray(self.labels())
+
+    # -- builders ----------------------------------------------------------
+    @staticmethod
+    def _write_meta(path, axis, shape, dtype, chunk_size, chunk_infos):
+        meta = dict(version=STORE_VERSION, axis=axis,
+                    shape=[int(shape[0]), int(shape[1])],
+                    dtype=np.dtype(dtype).name, chunk_size=int(chunk_size),
+                    chunks=[dict(start=c.start, stop=c.stop, nnz=c.nnz)
+                            for c in chunk_infos])
+        with open(os.path.join(path, _META), "w") as f:
+            json.dump(meta, f, indent=1)
+
+    @classmethod
+    def from_csr(cls, X: CSRMatrix, y: np.ndarray, path: str,
+                 axis: str = "samples", chunk_size: int = 8192
+                 ) -> "ShardStore":
+        """Convert an in-memory CSR (+ labels) into a store at ``path``.
+
+        ``axis`` picks the chunked (and later sharded) axis; rows of each
+        chunk slab are always that axis (samples chunks are stored
+        transposed). One O(nnz) pass; ``path`` must not already hold a
+        store.
+        """
+        if axis not in ("features", "samples"):
+            raise ValueError(f"unknown store axis {axis!r}")
+        if chunk_size <= 0:
+            raise ValueError(f"chunk_size must be positive, got {chunk_size}")
+        d, n = X.shape
+        y = np.asarray(y)
+        if y.shape != (n,):
+            raise ValueError(f"labels shape {y.shape} != ({n},)")
+        os.makedirs(os.path.join(path, _CHUNK_DIR), exist_ok=False)
+        src = X if axis == "features" else X.transpose()
+        axis_dim = src.shape[0]
+        infos = []
+        for i, start in enumerate(range(0, axis_dim, chunk_size)):
+            stop = min(start + chunk_size, axis_dim)
+            lo, hi = int(src.indptr[start]), int(src.indptr[stop])
+            _write_chunk(path, i, src.indptr[start:stop + 1] - lo,
+                         src.indices[lo:hi], src.data[lo:hi])
+            infos.append(ChunkInfo(index=i, start=start, stop=stop,
+                                   nnz=hi - lo))
+        np.save(os.path.join(path, _LABELS), y)
+        cls._write_meta(path, axis, (d, n), X.dtype, chunk_size, infos)
+        return cls(path)
+
+    @classmethod
+    def from_libsvm(cls, libsvm_path: str, path: str,
+                    axis: str = "samples", chunk_size: int = 8192,
+                    n_features: int | None = None, dtype=np.float32
+                    ) -> "ShardStore":
+        """Convert a libsvm text file into a store at ``path``.
+
+        ``axis='samples'`` streams: one pass over the file via
+        :func:`repro.data.sparse.iter_libsvm_chunks` with O(chunk) peak
+        memory — the path for datasets beyond RAM (samples arrive in
+        file order, which is exactly the chunk order). An explicit
+        ``n_features`` applies the shared truncation clamp per chunk.
+
+        ``axis='features'`` needs a global transposition, so it
+        materializes the CSR first (O(nnz) host memory) and delegates to
+        :meth:`from_csr` — convert on a machine whose RAM fits the
+        dataset once, then stream the store anywhere.
+        """
+        if axis == "features":
+            from repro.data.sparse import load_libsvm_sparse
+            X, y = load_libsvm_sparse(libsvm_path, n_features=n_features,
+                                      dtype=dtype)
+            return cls.from_csr(X, y, path, axis="features",
+                                chunk_size=chunk_size)
+        if axis != "samples":
+            raise ValueError(f"unknown store axis {axis!r}")
+        os.makedirs(os.path.join(path, _CHUNK_DIR), exist_ok=False)
+        infos: list[ChunkInfo] = []
+        y_parts: list[np.ndarray] = []
+        max_feat = -1
+        start = 0
+        for i, (fi, si, vs, ys) in enumerate(
+                iter_libsvm_chunks(libsvm_path, chunk_samples=chunk_size,
+                                   dtype=dtype, n_features=n_features)):
+            n_chunk = len(ys)
+            if len(fi):
+                max_feat = max(max_feat, int(fi.max()))
+            slab = CSRMatrix.from_coo(si - start, fi, vs,
+                                      (n_chunk, max_feat + 1), dtype=dtype)
+            _write_chunk(path, i, slab.indptr, slab.indices, slab.data)
+            infos.append(ChunkInfo(index=i, start=start,
+                                   stop=start + n_chunk, nnz=slab.nnz))
+            y_parts.append(ys)
+            start += n_chunk
+        d = n_features if n_features is not None else max_feat + 1
+        n = start
+        y = (np.concatenate(y_parts) if y_parts
+             else np.zeros(0, dtype)).astype(dtype)
+        np.save(os.path.join(path, _LABELS), y)
+        cls._write_meta(path, "samples", (d, n), dtype, chunk_size, infos)
+        return cls(path)

@@ -1,0 +1,354 @@
+"""Async-prefetch chunk streaming: the pipeline half of the out-of-core path.
+
+:mod:`repro.data.store` puts the dataset on disk in fixed-width,
+memory-mappable CSR chunks; this module turns a store + a chunk-granular
+load-balanced :class:`repro.data.partition.Partition` into a **schedule**
+of per-step stacked blocked-ELL tiles and streams it through a
+background-thread, depth-``k`` double-buffered pipeline:
+
+::
+
+    disk (memmap read) ──▶ host (CSR→ELL tile build) ──▶ device_put ──╮
+         prefetch thread, k payloads ahead                            │
+    ────────────────────────────────────────────────────────────────── ▼
+    consumer: kernel execution on step t while step t+1..t+k load
+
+Peak data-plane memory is ``O(m · chunk_size · prefetch_depth)`` —
+bounded by the *schedule step*, never the dataset. The
+:class:`PrefetchStats` byte ledger measures exactly that (the
+``bench_streaming`` gate asserts it scales with chunk size, not nnz).
+
+Schedule shape: the LPT planner gives every shard exactly ``T =
+n_chunks_padded / m`` chunks; step ``t`` stacks the ``t``-th chunk of
+every shard into uniform ``(m, ...)`` arrays (all chunks padded to the
+store-wide max ELL widths), so one jit-compatible shape covers the whole
+stream and a multi-device mesh computes all shards' chunks of a step
+concurrently.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import queue
+import threading
+from typing import Callable, Iterator
+
+import numpy as np
+
+from repro.data.partition import Partition, chunk_partition
+from repro.data.sparse import (CSRMatrix, ell_from_csr, ell_tile_widths,
+                               pad_csr_rows)
+from repro.data.store import ShardStore
+
+
+# ---------------------------------------------------------------------------
+# prefetcher
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PrefetchStats:
+    """Byte ledger of a streaming pipeline (thread-safe).
+
+    ``live_bytes`` counts payloads currently resident: queued by the
+    producer thread, in flight, or held by the consumer (the consumer's
+    previous payload is released when it takes the next). ``peak_bytes``
+    is the high-water mark — the measured data-plane footprint the
+    out-of-core gate checks; ``max_step_bytes`` the largest single
+    payload (one schedule step, all ``m`` shards).
+    """
+
+    passes: int = 0
+    steps: int = 0
+    bytes_loaded: int = 0
+    live_bytes: int = 0
+    peak_bytes: int = 0
+    max_step_bytes: int = 0
+
+    def __post_init__(self):
+        self._lock = threading.Lock()
+
+    def _produced(self, nbytes: int):
+        with self._lock:
+            self.steps += 1
+            self.bytes_loaded += nbytes
+            self.live_bytes += nbytes
+            self.peak_bytes = max(self.peak_bytes, self.live_bytes)
+            self.max_step_bytes = max(self.max_step_bytes, nbytes)
+
+    def _released(self, nbytes: int):
+        with self._lock:
+            self.live_bytes -= nbytes
+
+
+class ChunkPrefetcher:
+    """Background-thread, depth-``k`` prefetch pipeline over a schedule.
+
+    ``load_fn(t)`` must return ``(payload, nbytes)`` for step ``t`` —
+    typically: memmap-read the step's chunks, build the stacked ELL
+    tiles (the host-pin stage), and ``device_put`` them. The producer
+    thread runs up to ``depth`` payloads ahead of the consumer (a
+    bounded queue is the back-pressure), so disk + host work for step
+    ``t+1..t+k`` overlaps the consumer's kernel execution on step ``t``.
+
+    Iterating yields payloads in schedule order. At most ``depth + 2``
+    payloads are ever resident (queue + producer in-flight + consumer);
+    ``stats`` records the realized byte high-water mark. Producer
+    exceptions re-raise in the consumer.
+    """
+
+    def __init__(self, load_fn: Callable[[int], tuple[object, int]],
+                 n_steps: int, depth: int = 2,
+                 stats: PrefetchStats | None = None):
+        self._load_fn = load_fn
+        self._n_steps = int(n_steps)
+        self._depth = max(int(depth), 1)
+        self.stats = stats if stats is not None else PrefetchStats()
+
+    def __iter__(self) -> Iterator[object]:
+        stats = self.stats
+        with stats._lock:
+            stats.passes += 1
+        q: queue.Queue = queue.Queue(maxsize=self._depth)
+        done = object()
+        cancel = threading.Event()
+
+        def put(item) -> bool:
+            # bounded put that aborts if the consumer walked away, so an
+            # abandoned pass can never leave the producer blocked forever
+            while not cancel.is_set():
+                try:
+                    q.put(item, timeout=0.1)
+                    return True
+                except queue.Full:
+                    continue
+            return False
+
+        def producer():
+            try:
+                for t in range(self._n_steps):
+                    if cancel.is_set():
+                        return
+                    payload, nbytes = self._load_fn(t)
+                    stats._produced(nbytes)
+                    if not put((payload, nbytes)):
+                        stats._released(nbytes)
+                        return
+                put(done)
+            except BaseException as e:           # surfaced to the consumer
+                put(e)
+
+        thread = threading.Thread(target=producer, daemon=True,
+                                  name="repro-chunk-prefetch")
+        thread.start()
+        held = 0
+        try:
+            while True:
+                item = q.get()
+                if item is done:
+                    break
+                if isinstance(item, BaseException):
+                    raise item
+                payload, nbytes = item
+                if held:
+                    stats._released(held)        # consumer moved on
+                held = nbytes
+                yield payload
+        finally:
+            if held:
+                stats._released(held)
+            cancel.set()
+            while True:                          # release queued payloads
+                try:
+                    item = q.get_nowait()
+                except queue.Empty:
+                    break
+                if isinstance(item, tuple):
+                    stats._released(item[1])
+            thread.join(timeout=30.0)
+
+
+# ---------------------------------------------------------------------------
+# stream plan (store + partition -> schedule + stacked payloads)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StreamPlan:
+    """Everything a streaming solve needs to walk a store.
+
+    Built by :func:`plan_streams`. ``schedule[s, t]`` is the store chunk
+    id computed by shard ``s`` at step ``t`` (``-1`` = synthetic empty
+    chunk, from padding the chunk count to a multiple of ``m``); the
+    ``partition`` is the matching index-level permutation, identical to
+    what the in-memory solver derives at ``partition_block =
+    chunk_size`` granularity. ``w_fwd``/``w_tr`` are the store-wide max
+    ELL widths every chunk pads to, fixing one static payload shape.
+    """
+
+    store: ShardStore
+    partition: Partition
+    schedule: np.ndarray          # (m, T) int64 chunk ids, -1 = empty
+    m: int
+    chunk_size: int
+    block_rows: int               # ELL tile rows (feature axis)
+    block_cols: int               # ELL tile cols (sample axis)
+    w_fwd: int
+    w_tr: int
+    prefetch_depth: int = 2
+    device_put: Callable | None = None    # dict[str, np.ndarray] -> dict
+    stats: PrefetchStats = dataclasses.field(default_factory=PrefetchStats)
+
+    @property
+    def n_steps(self) -> int:
+        """T — schedule steps per full pass (chunks per shard)."""
+        return int(self.schedule.shape[1])
+
+    @property
+    def width_local(self) -> int:
+        """Indices of the chunked axis each shard owns (T * chunk_size)."""
+        return self.n_steps * self.chunk_size
+
+    @property
+    def axis_padded(self) -> int:
+        """Padded length of the chunked (sharded) axis (m * width_local)."""
+        return self.m * self.width_local
+
+    @property
+    def other_padded(self) -> int:
+        """Padded length of the non-chunked axis (to its tile edge)."""
+        other = self.store.other_dim
+        edge = (self.block_cols if self.store.axis == "features"
+                else self.block_rows)
+        return max(-(-other // edge), 1) * edge
+
+    # -- payload construction ---------------------------------------------
+    def _chunk_slab(self, cid: int) -> CSRMatrix:
+        """Chunk ``cid`` as a full-width (chunk_size-row) CSR slab; id
+        ``-1`` (or a ragged final chunk) pads with empty rows."""
+        if cid < 0:
+            return CSRMatrix(indptr=np.zeros(self.chunk_size + 1, np.int64),
+                             indices=np.zeros(0, np.int32),
+                             data=np.zeros(0, self.store.dtype),
+                             shape=(self.chunk_size, self.store.other_dim))
+        return pad_csr_rows(self.store.chunk_csr(int(cid)), self.chunk_size)
+
+    def _chunk_ells(self, cid: int, kind: str):
+        """The requested ELL layouts of one chunk, padded to the global
+        widths. 'fwd' is the layout of the local (feature-major) matrix,
+        'tr' of its transpose — the :class:`repro.data.sparse.EllPair`
+        convention."""
+        slab = self._chunk_slab(cid)
+        br, bc = self.block_rows, self.block_cols
+        if self.store.axis == "samples":
+            slab = slab.transpose()           # local matrix rows = features
+        out = {}
+        if kind in ("fwd", "both"):
+            e = ell_from_csr(slab, br, bc, width=self.w_fwd)
+            out["data"], out["cols"] = e.data, e.cols
+        if kind in ("tr", "both"):
+            e = ell_from_csr(slab.transpose(), bc, br, width=self.w_tr)
+            out["dataT"], out["colsT"] = e.data, e.cols
+        return out
+
+    def _load_step(self, t: int, kind: str) -> tuple[dict, int]:
+        per_shard = [self._chunk_ells(int(self.schedule[s, t]), kind)
+                     for s in range(self.m)]
+        stacked = {k: np.stack([p[k] for p in per_shard])
+                   for k in per_shard[0]}
+        nbytes = sum(a.nbytes for a in stacked.values())
+        if self.device_put is not None:
+            stacked = self.device_put(stacked)
+        return stacked, nbytes
+
+    def stream(self, kind: str = "both") -> Iterator[dict]:
+        """Iterate the schedule's steps through the prefetch pipeline.
+
+        ``kind`` selects the layouts streamed: ``'fwd'`` (keys
+        ``data``/``cols`` — drives ``X v``), ``'tr'`` (``dataT``/
+        ``colsT`` — drives ``X^T u``), or ``'both'``. Each yielded dict
+        holds ``(m, ...)``-stacked arrays for one step.
+        """
+        if kind not in ("fwd", "tr", "both"):
+            raise ValueError(f"unknown stream kind {kind!r}")
+        return iter(ChunkPrefetcher(
+            lambda t: self._load_step(t, kind), self.n_steps,
+            depth=self.prefetch_depth, stats=self.stats))
+
+
+def _global_ell_widths(store: ShardStore, br: int, bc: int
+                       ) -> tuple[int, int]:
+    """Store-wide max ELL widths for a ``(br, bc)`` tiling.
+
+    The first planning against a store scans every chunk's index
+    structure (values are never read) and persists the result in a
+    sidecar next to ``meta.json``, so repeat solves plan from headers
+    alone — the index scan of a huge store is paid once per tile shape,
+    not once per run. Cache writes are best-effort (a read-only store
+    just rescans).
+    """
+    cache_path = os.path.join(store.path, f"ell_widths.{br}x{bc}.json")
+    key = dict(n_chunks=store.n_chunks, nnz=store.nnz)
+    try:
+        with open(cache_path) as f:
+            cached = json.load(f)
+        if all(cached.get(k) == v for k, v in key.items()):
+            return int(cached["w_fwd"]), int(cached["w_tr"])
+    except (OSError, ValueError, KeyError):
+        pass
+    w_fwd, w_tr = 1, 1
+    for i in range(store.n_chunks):
+        slab = store.chunk_csr(i)
+        if store.axis == "features":
+            wf, wt = ell_tile_widths(slab, br, bc)
+        else:
+            wt, wf = ell_tile_widths(slab, bc, br)
+        w_fwd, w_tr = max(w_fwd, wf), max(w_tr, wt)
+    try:
+        with open(cache_path, "w") as f:
+            json.dump(dict(w_fwd=w_fwd, w_tr=w_tr, **key), f)
+    except OSError:
+        pass
+    return w_fwd, w_tr
+
+
+def plan_streams(store: ShardStore, m: int, strategy: str = "lpt",
+                 block_rows: int = 128, block_cols: int = 128,
+                 prefetch_depth: int = 2,
+                 device_put: Callable | None = None) -> StreamPlan:
+    """Plan a balanced streaming solve over ``store`` for ``m`` shards.
+
+    Reads only the store *header* plus each chunk's index structure (to
+    size the global ELL widths) — no values. The chunk-granular LPT
+    assignment (:func:`repro.data.partition.chunk_partition`) balances
+    per-shard nnz exactly like the in-memory path at
+    ``partition_block = chunk_size`` granularity; the schedule lists
+    every shard's chunks in ascending id order, matching the in-memory
+    local row layout.
+
+    ``chunk_size`` must be a multiple of the chunked axis' tile edge
+    (``block_rows`` for a features store, ``block_cols`` for samples) so
+    chunk boundaries never split a tile.
+    """
+    edge = block_rows if store.axis == "features" else block_cols
+    if store.chunk_size % edge != 0:
+        raise ValueError(
+            f"store chunk_size {store.chunk_size} must be a multiple of "
+            f"the {store.axis}-axis ELL tile edge {edge}")
+    part = chunk_partition(store.chunk_nnz, store.chunk_size,
+                           store.n_items, m, strategy)
+    width = part.width
+    T = width // store.chunk_size
+    starts = (np.arange(m)[:, None] * width
+              + np.arange(T)[None, :] * store.chunk_size)
+    schedule = part.perm[starts] // store.chunk_size
+    schedule = np.where(schedule < store.n_chunks, schedule, -1)
+
+    br, bc = block_rows, block_cols
+    w_fwd, w_tr = _global_ell_widths(store, br, bc)
+
+    return StreamPlan(store=store, partition=part, schedule=schedule,
+                      m=m, chunk_size=store.chunk_size,
+                      block_rows=br, block_cols=bc,
+                      w_fwd=w_fwd, w_tr=w_tr,
+                      prefetch_depth=prefetch_depth,
+                      device_put=device_put)

@@ -74,6 +74,35 @@ def test_libsvm_n_features_pads(tmp_path):
     assert X.shape == (5, 1) and X[0, 0] == 2.0 and X[1:].sum() == 0
 
 
+def test_all_three_readers_share_truncation_clamp(tmp_path):
+    """Regression (ISSUE 3): the explicit-small-n_features truncation
+    must behave identically in load_libsvm, load_libsvm_sparse AND
+    iter_libsvm_chunks — all three route through the shared
+    repro.data.sparse.truncate_features clamp (iter_libsvm_chunks used
+    to skip it entirely)."""
+    from repro.data.sparse import iter_libsvm_chunks, load_libsvm_sparse
+
+    p = str(tmp_path / "t.svm")
+    with open(p, "w") as f:
+        f.write("1 1:1.0 5:5.0\n-1 2:2.0 9:9.0\n1 3:3.0\n")
+    d = 3
+    Xd, yd = load_libsvm(p, n_features=d)
+    Xs, ys = load_libsvm_sparse(p, n_features=d, chunk_samples=2)
+    np.testing.assert_allclose(Xs.todense(), Xd)
+    np.testing.assert_array_equal(ys, yd)
+    assert Xd.shape == (3, 3)
+    assert Xd[0, 0] == 1.0 and Xd[1, 1] == 2.0 and Xd[2, 2] == 3.0
+    # every chunk of the streaming iterator is already clamped
+    for fi, si, vs, _ in iter_libsvm_chunks(p, chunk_samples=1,
+                                            n_features=d):
+        assert (fi < d).all()
+    flat = [(int(f), int(s), float(v))
+            for fi, si, vs, _ in iter_libsvm_chunks(p, chunk_samples=2,
+                                                    n_features=d)
+            for f, s, v in zip(fi, si, vs)]
+    assert flat == [(0, 0, 1.0), (1, 1, 2.0), (2, 2, 3.0)]
+
+
 def test_libsvm_property_roundtrip_dense_vs_sparse_reader():
     """Property test: save_libsvm -> load_libsvm == load_libsvm_sparse
     (the new streaming reader) across random sparse matrices."""

@@ -1,0 +1,338 @@
+"""Out-of-core shard store (repro.data.store) + chunk partition plan +
+prefetch pipeline (repro.data.stream): round-trips, header-only planning,
+byte accounting, schedule invariants."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.data.libsvm import save_libsvm
+from repro.data.partition import chunk_partition, lpt_partition
+from repro.data.sparse import (CSRMatrix, ell_from_csr, ell_tile_widths,
+                               make_sparse_glm_data, pad_csr_rows)
+from repro.data.store import ShardStore
+from repro.data.stream import ChunkPrefetcher, PrefetchStats, plan_streams
+
+
+def _random_csr(d, n, density, seed, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    Xd = np.where(rng.random((d, n)) < density,
+                  rng.standard_normal((d, n)), 0.0).astype(dtype)
+    return CSRMatrix.from_dense(Xd, dtype=dtype), Xd
+
+
+# ---------------------------------------------------------------------------
+# store basics
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("axis", ["features", "samples"])
+def test_store_roundtrip_and_header(tmp_path, axis):
+    X, Xd = _random_csr(23, 17, 0.3, seed=0)
+    y = np.arange(17, dtype=np.float32)
+    store = ShardStore.from_csr(X, y, str(tmp_path / "s"), axis=axis,
+                                chunk_size=5)
+    n_items = 23 if axis == "features" else 17
+    assert store.n_chunks == -(-n_items // 5)
+    assert store.n_items == n_items
+    assert store.nnz == X.nnz
+    assert int(store.chunk_nnz.sum()) == X.nnz
+    # ragged final chunk covers the tail
+    last = store.chunks[-1]
+    assert last.stop == n_items and last.stop - last.start <= 5
+    X2, y2 = store.to_csr()
+    np.testing.assert_array_equal(X2.todense(), Xd)
+    np.testing.assert_array_equal(y2, y)
+
+
+def test_store_chunks_are_memmapped_and_random_access(tmp_path):
+    X, Xd = _random_csr(16, 9, 0.4, seed=1)
+    y = np.zeros(9, np.float32)
+    store = ShardStore.from_csr(X, y, str(tmp_path / "s"),
+                                axis="features", chunk_size=4)
+    slab = store.chunk_csr(1)
+    assert isinstance(slab.data, np.memmap)
+    # chunks readable in any (permuted) order, slabs match the source
+    for i in np.random.default_rng(0).permutation(store.n_chunks):
+        info = store.chunks[i]
+        np.testing.assert_array_equal(store.chunk_csr(int(i)).todense(),
+                                      Xd[info.start:info.stop])
+
+
+def test_store_version_check(tmp_path):
+    X, _ = _random_csr(4, 4, 0.5, seed=2)
+    store = ShardStore.from_csr(X, np.zeros(4, np.float32),
+                                str(tmp_path / "s"), chunk_size=2)
+    import json
+    meta_path = os.path.join(store.path, "meta.json")
+    with open(meta_path) as f:
+        meta = json.load(f)
+    meta["version"] = 999
+    with open(meta_path, "w") as f:
+        json.dump(meta, f)
+    with pytest.raises(ValueError, match="version"):
+        ShardStore(store.path)
+
+
+def test_store_rejects_bad_args(tmp_path):
+    X, _ = _random_csr(4, 4, 0.5, seed=3)
+    y = np.zeros(4, np.float32)
+    with pytest.raises(ValueError, match="axis"):
+        ShardStore.from_csr(X, y, str(tmp_path / "a"), axis="rows")
+    with pytest.raises(ValueError, match="chunk_size"):
+        ShardStore.from_csr(X, y, str(tmp_path / "b"), chunk_size=0)
+    with pytest.raises(ValueError, match="labels"):
+        ShardStore.from_csr(X, np.zeros(3, np.float32),
+                            str(tmp_path / "c"))
+
+
+def test_store_from_libsvm_streams_sample_chunks(tmp_path):
+    rng = np.random.default_rng(4)
+    Xd = np.where(rng.random((7, 13)) < 0.4,
+                  rng.standard_normal((7, 13)), 0.0).astype(np.float32)
+    y = np.sign(rng.standard_normal(13)).astype(np.float32)
+    y[y == 0] = 1.0
+    p = str(tmp_path / "f.svm")
+    save_libsvm(p, Xd, y)
+    store = ShardStore.from_libsvm(p, str(tmp_path / "s"), axis="samples",
+                                   chunk_size=4, n_features=7)
+    assert store.shape == (7, 13) and store.n_chunks == 4
+    X2, y2 = store.to_csr()
+    np.testing.assert_allclose(X2.todense(), Xd, atol=1e-6, rtol=1e-5)
+    np.testing.assert_array_equal(y2, y)
+    # explicit small n_features truncates through the shared clamp
+    store_t = ShardStore.from_libsvm(p, str(tmp_path / "t"),
+                                     axis="samples", chunk_size=4,
+                                     n_features=3)
+    Xt, _ = store_t.to_csr()
+    np.testing.assert_allclose(Xt.todense(), Xd[:3], atol=1e-6, rtol=1e-5)
+
+
+def test_store_from_libsvm_features_axis_delegates(tmp_path):
+    rng = np.random.default_rng(5)
+    Xd = np.where(rng.random((9, 6)) < 0.5,
+                  rng.standard_normal((9, 6)), 0.0).astype(np.float32)
+    y = np.ones(6, np.float32)
+    p = str(tmp_path / "f.svm")
+    save_libsvm(p, Xd, y)
+    store = ShardStore.from_libsvm(p, str(tmp_path / "s"),
+                                   axis="features", chunk_size=3,
+                                   n_features=9)
+    assert store.axis == "features"
+    X2, _ = store.to_csr()
+    np.testing.assert_allclose(X2.todense(), Xd, atol=1e-6, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis round-trip: CSRMatrix -> ShardStore -> CSRMatrix
+# ---------------------------------------------------------------------------
+
+def test_store_property_roundtrip(tmp_path):
+    """Property test: CSR -> store -> CSR is exact for both axes across
+    chunk sizes producing empty chunks, single-row chunks, ragged tails;
+    dtype preserved; chunks reassemble correctly when read in permuted
+    order."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    counter = [0]
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        d=st.integers(1, 14),
+        n=st.integers(1, 14),
+        density=st.floats(0.0, 0.9),   # 0.0 -> every chunk is empty
+        chunk=st.integers(1, 16),      # 1 -> single-index chunks
+        axis=st.sampled_from(["features", "samples"]),
+        dtype=st.sampled_from([np.float32, np.float64]),
+        seed=st.integers(0, 2 ** 16),
+    )
+    def roundtrip(d, n, density, chunk, axis, dtype, seed):
+        rng = np.random.default_rng(seed)
+        Xd = np.where(rng.random((d, n)) < density,
+                      rng.standard_normal((d, n)), 0.0).astype(dtype)
+        X = CSRMatrix.from_dense(Xd, dtype=dtype)
+        y = rng.standard_normal(n).astype(dtype)
+        counter[0] += 1
+        path = str(tmp_path / f"s{counter[0]}")
+        store = ShardStore.from_csr(X, y, path, axis=axis,
+                                    chunk_size=chunk)
+        X2, y2 = store.to_csr()
+        assert X2.dtype == dtype and store.dtype == dtype
+        assert X2.shape == (d, n)
+        np.testing.assert_array_equal(X2.todense(), Xd)
+        np.testing.assert_array_equal(y2, y)
+        # permuted chunk order: random-access slabs reproduce the source
+        order = rng.permutation(store.n_chunks)
+        src = X if axis == "features" else X.transpose()
+        for i in order:
+            info = store.chunks[int(i)]
+            np.testing.assert_array_equal(
+                store.chunk_csr(int(i)).todense(),
+                src.take_rows(np.arange(info.start, info.stop)).todense())
+
+    roundtrip()
+
+
+@pytest.mark.parametrize("axis", ["features", "samples"])
+@pytest.mark.parametrize("d,n,density,chunk,dtype", [
+    (6, 5, 0.0, 2, np.float32),    # all-empty chunks
+    (9, 4, 0.5, 1, np.float64),    # single-index chunks, f64 preserved
+    (1, 1, 1.0, 3, np.float32),    # chunk larger than the axis
+    (13, 7, 0.3, 5, np.float32),   # ragged tail
+])
+def test_store_roundtrip_edge_cases(tmp_path, axis, d, n, density, chunk,
+                                    dtype):
+    """Deterministic slice of the property test above — runs even where
+    hypothesis isn't installed."""
+    rng = np.random.default_rng(d * 31 + n)
+    Xd = np.where(rng.random((d, n)) < density,
+                  rng.standard_normal((d, n)), 0.0).astype(dtype)
+    X = CSRMatrix.from_dense(Xd, dtype=dtype)
+    y = rng.standard_normal(n).astype(dtype)
+    store = ShardStore.from_csr(X, y, str(tmp_path / "s"), axis=axis,
+                                chunk_size=chunk)
+    X2, y2 = store.to_csr()
+    assert X2.dtype == dtype
+    np.testing.assert_array_equal(X2.todense(), Xd)
+    np.testing.assert_array_equal(y2, y)
+
+
+# ---------------------------------------------------------------------------
+# chunk partition (header-only planning)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", ["lpt", "width"])
+@pytest.mark.parametrize("m", [2, 4])
+def test_chunk_partition_matches_index_level(strategy, m):
+    """chunk_partition from header nnz stats == lpt_partition at
+    block=chunk granularity from per-index counts (the equivalence that
+    lets streaming and in-memory solvers share one layout)."""
+    X, _, _ = make_sparse_glm_data(d=96, n=64, density=0.1, alpha=1.2,
+                                   seed=0)
+    counts = X.nnz_per_row()
+    chunk = 8
+    chunk_nnz = np.add.reduceat(counts, np.arange(0, len(counts), chunk))
+    pc = chunk_partition(chunk_nnz, chunk, len(counts), m, strategy)
+    if strategy == "lpt":
+        pi = lpt_partition(counts, m, block=chunk, pad_multiple=4)
+        np.testing.assert_array_equal(pc.perm, pi.perm)
+        np.testing.assert_array_equal(pc.shard_nnz, pi.shard_nnz)
+    assert pc.width % chunk == 0
+    assert sorted(pc.perm.tolist()) == list(range(len(pc.perm)))
+    assert pc.shard_nnz.sum() == counts.sum()
+
+
+def test_chunk_partition_rejects_unknown_strategy():
+    with pytest.raises(ValueError):
+        chunk_partition(np.array([1, 2]), 4, 8, 2, "magic")
+
+
+# ---------------------------------------------------------------------------
+# ell width planning + row padding helpers
+# ---------------------------------------------------------------------------
+
+def test_ell_tile_widths_match_natural(tmp_path):
+    X, _ = _random_csr(24, 18, 0.25, seed=6)
+    wf, wt = ell_tile_widths(X, 8, 8)
+    assert wf == ell_from_csr(X, 8, 8).width
+    assert wt == ell_from_csr(X.transpose(), 8, 8).width
+    # empty matrix floors at 1 (the zero-tile convention)
+    empty = CSRMatrix(indptr=np.zeros(9, np.int64),
+                      indices=np.zeros(0, np.int32),
+                      data=np.zeros(0, np.float32), shape=(8, 8))
+    assert ell_tile_widths(empty, 4, 4) == (1, 1)
+
+
+def test_pad_csr_rows():
+    X, Xd = _random_csr(5, 7, 0.5, seed=7)
+    Xp = pad_csr_rows(X, 9)
+    assert Xp.shape == (9, 7)
+    np.testing.assert_array_equal(Xp.todense()[:5], Xd)
+    assert Xp.todense()[5:].sum() == 0
+    assert pad_csr_rows(X, 5) is X
+    with pytest.raises(ValueError):
+        pad_csr_rows(X, 3)
+
+
+# ---------------------------------------------------------------------------
+# prefetcher
+# ---------------------------------------------------------------------------
+
+def test_prefetcher_order_and_byte_ledger():
+    loads = []
+
+    def load(t):
+        loads.append(t)
+        return {"step": t}, 100
+
+    stats = PrefetchStats()
+    pf = ChunkPrefetcher(load, n_steps=7, depth=2, stats=stats)
+    got = [p["step"] for p in pf]
+    assert got == list(range(7))
+    assert loads == list(range(7))
+    assert stats.passes == 1 and stats.steps == 7
+    assert stats.bytes_loaded == 700
+    assert stats.live_bytes == 0            # everything released
+    # at most depth + producer-in-flight + consumer-held payloads live
+    assert 100 <= stats.peak_bytes <= 4 * 100
+    assert stats.max_step_bytes == 100
+    # a second pass accumulates into the same ledger
+    for _ in pf:
+        pass
+    assert stats.passes == 2 and stats.bytes_loaded == 1400
+
+
+def test_prefetcher_propagates_producer_errors():
+    def load(t):
+        if t == 2:
+            raise RuntimeError("disk on fire")
+        return t, 1
+
+    with pytest.raises(RuntimeError, match="disk on fire"):
+        list(ChunkPrefetcher(load, n_steps=5, depth=1))
+
+
+# ---------------------------------------------------------------------------
+# stream plan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("axis", ["features", "samples"])
+def test_plan_schedule_invariants(tmp_path, axis):
+    X, _, _ = make_sparse_glm_data(d=64, n=48, density=0.15, alpha=1.2,
+                                   seed=1)
+    y = np.zeros(48, np.float32)
+    store = ShardStore.from_csr(X, y, str(tmp_path / "s"), axis=axis,
+                                chunk_size=8)
+    plan = plan_streams(store, m=4, block_rows=4, block_cols=4)
+    m, T = plan.schedule.shape
+    assert m == 4 and T == plan.n_steps
+    real = plan.schedule[plan.schedule >= 0]
+    # every real chunk scheduled exactly once
+    np.testing.assert_array_equal(np.sort(real), np.arange(store.n_chunks))
+    # per-shard chunks ascend (the in-memory local layout order)
+    for s in range(m):
+        ids = [c for c in plan.schedule[s] if c >= 0]
+        assert ids == sorted(ids)
+    assert plan.axis_padded == m * plan.width_local
+    # stacked payload shapes are uniform and whole-stream constant
+    shapes = set()
+    for payload in plan.stream("both"):
+        shapes.add(tuple((k, v.shape) for k, v in sorted(payload.items())))
+    assert len(shapes) == 1
+    stats = plan.stats
+    assert stats.peak_bytes <= (plan.prefetch_depth + 2) \
+        * stats.max_step_bytes
+
+
+def test_plan_rejects_misaligned_chunk(tmp_path):
+    X, _, _ = make_sparse_glm_data(d=32, n=32, density=0.2, seed=2)
+    store = ShardStore.from_csr(X, np.zeros(32, np.float32),
+                                str(tmp_path / "s"), axis="features",
+                                chunk_size=6)
+    with pytest.raises(ValueError, match="multiple"):
+        plan_streams(store, m=2, block_rows=4, block_cols=4)
+    with pytest.raises(ValueError, match="unknown stream kind"):
+        next(iter(plan_streams(ShardStore.from_csr(
+            X, np.zeros(32, np.float32), str(tmp_path / "s2"),
+            axis="features", chunk_size=8), m=2, block_rows=4,
+            block_cols=4).stream("sideways")))

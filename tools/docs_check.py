@@ -1,7 +1,7 @@
 """Documentation gate (run by ``make docs-check``; part of the tier-1
 Makefile path).
 
-Two checks, both fail-fast with a nonzero exit:
+Three checks, all fail-fast with a nonzero exit:
 
 1. **Intra-repo links**: every relative markdown link ``[text](target)``
    in the repo's ``*.md`` files must resolve to an existing file
@@ -11,6 +11,10 @@ Two checks, both fail-fast with a nonzero exit:
    ``repro.utils``) must carry a non-empty docstring, and so must every
    public function of the cost model ``repro.core.comm`` and the kernel
    entry points in ``repro.kernels.ops``.
+3. **Benchmark gates**: every ``bench_<name>`` benchmark documented in
+   EXPERIMENTS.md must exist under ``benchmarks/`` AND be wired into the
+   ``benchmarks/run.py`` harness — a documented gate nobody can run is a
+   broken promise.
 """
 from __future__ import annotations
 
@@ -87,14 +91,38 @@ def check_docstrings() -> list[str]:
     return errors
 
 
+def check_bench_gates() -> list[str]:
+    """Every bench_<name> mentioned in EXPERIMENTS.md must be a real
+    benchmark module that benchmarks/run.py knows how to run."""
+    errors = []
+    exp_path = os.path.join(REPO, "EXPERIMENTS.md")
+    run_path = os.path.join(REPO, "benchmarks", "run.py")
+    if not os.path.exists(exp_path) or not os.path.exists(run_path):
+        return errors
+    with open(exp_path) as f:
+        documented = set(re.findall(r"\bbench_(\w+)", f.read()))
+    with open(run_path) as f:
+        wired = f.read()
+    for name in sorted(documented):
+        mod = os.path.join(REPO, "benchmarks", f"bench_{name}.py")
+        if not os.path.exists(mod):
+            errors.append(f"EXPERIMENTS.md: documents bench_{name} but "
+                          f"benchmarks/bench_{name}.py does not exist")
+        elif f"bench_{name}" not in wired:
+            errors.append(f"EXPERIMENTS.md: documents bench_{name} but "
+                          "benchmarks/run.py never runs it")
+    return errors
+
+
 def main() -> int:
-    errors = check_links() + check_docstrings()
+    errors = check_links() + check_docstrings() + check_bench_gates()
     for e in errors:
         print(f"[docs-check] {e}")
     if errors:
         print(f"[docs-check] FAIL: {len(errors)} problem(s)")
         return 1
-    print("[docs-check] OK: links resolve, public API documented")
+    print("[docs-check] OK: links resolve, public API documented, "
+          "documented benchmarks wired into run.py")
     return 0
 
 

@@ -3,7 +3,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast bench bench-smoke bench-sstep bench-loadbalance \
-	bench-streaming docs-check
+	bench-streaming bench-serving serve-demo docs-check
 
 test: docs-check bench-smoke ## tier-1 verify: docs gate + bench smoke + full suite
 	$(PY) -m pytest -x -q
@@ -14,7 +14,7 @@ test-fast:       ## skip the slow multi-device subprocess tests
 docs-check:      ## fail on broken doc links / missing docstrings / unwired bench gates
 	$(PY) tools/docs_check.py
 
-bench:           ## full benchmark suite (paper figures + s-step + load balance + streaming)
+bench:           ## full benchmark suite (paper figures + s-step + load balance + streaming + serving)
 	$(PY) -m benchmarks.run
 
 bench-smoke:     ## every benchmark at tiny shapes (CI smoke; also part of `make test`)
@@ -28,3 +28,9 @@ bench-loadbalance: ## LPT vs equal-width sparse partitioning bench only
 
 bench-streaming: ## out-of-core streaming solver gate only
 	$(PY) -m benchmarks.bench_streaming
+
+bench-serving:   ## online GLM serving gate only (parity + throughput + warm refit)
+	$(PY) -m benchmarks.bench_serving
+
+serve-demo:      ## end-to-end serving demo: fit -> publish -> score -> refit -> hot swap
+	$(PY) examples/glm_serve_demo.py

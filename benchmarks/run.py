@@ -1,9 +1,9 @@
 """Benchmark harness entry point: ``python -m benchmarks.run``.
 
 Runs every paper-table/figure benchmark (fig3, fig4, fig5, table4,
-woodbury), the gated engine benches (sstep, loadbalance, streaming),
-the amdahl decomposition, and — if a dry-run results file exists — the
-roofline analysis. ``--quick`` skips the expensive sweeps; ``--smoke``
+woodbury), the gated engine benches (sstep, loadbalance, streaming,
+serving), the amdahl decomposition, and — if a dry-run results file
+exists — the roofline analysis. ``--quick`` skips the expensive sweeps; ``--smoke``
 (the ``make bench-smoke`` CI gate) runs *everything* at tiny shapes.
 """
 from __future__ import annotations
@@ -24,8 +24,8 @@ def main(argv=None):
                          "REPRO_BENCH_SMOKE=1)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig3,fig4,fig5,table4,"
-                         "sstep,loadbalance,streaming,woodbury,amdahl,"
-                         "roofline")
+                         "sstep,loadbalance,streaming,serving,woodbury,"
+                         "amdahl,roofline")
     args = ap.parse_args(argv)
 
     if args.smoke:
@@ -40,7 +40,7 @@ def main(argv=None):
         if args.quick and not args.smoke:
             # these run many full fits (or a forced-8-device subprocess)
             return name not in ("fig3", "sstep", "loadbalance",
-                                "streaming")
+                                "streaming", "serving")
         return True
 
     t0 = time.perf_counter()
@@ -63,6 +63,10 @@ def main(argv=None):
     if want("streaming"):
         from benchmarks import bench_streaming
         bench_streaming.run()
+        print()
+    if want("serving"):
+        from benchmarks import bench_serving
+        bench_serving.run()
         print()
     if want("woodbury"):
         from benchmarks import bench_woodbury

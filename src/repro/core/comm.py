@@ -258,3 +258,81 @@ def disco_streaming_iter_time(shard_nnz, pcg_iters: int, partition: str,
                 total_no_overlap_s=total_naive,
                 overlap_savings_s=total_naive - total,
                 straggler=base["straggler"])
+
+
+# ---------------------------------------------------------------------------
+# online serving extension (docs/serving.md)
+#
+# The inference plane (repro.glm_serve) scores feature-vector requests
+# through the blocked-ELL kernels. Its latency structure is the inverse
+# of training's: per *tick* there is ONE kernel dispatch (jit call,
+# host->device staging, launch) whose fixed cost dwarfs the per-request
+# sparse dot product, so sequential single-request scoring is
+# dispatch-bound and micro-batching B requests amortizes the dispatch
+# over B — the ">= 4x at batch 64" gate of benchmarks/bench_serving.py
+# is exactly this amortization.
+# ---------------------------------------------------------------------------
+
+def scoring_flops(nnz: int) -> int:
+    """Flops of scoring stored request nonzeros: one multiply-add per
+    nonzero of the packed request batch (margins only — the loss link
+    is O(batch) and negligible)."""
+    return 2 * nnz
+
+
+def glm_serving_tick_time(batch: int, nnz_per_req: float, *,
+                          ell_width: int, block_b: int, block_d: int,
+                          dispatch_s: float = 2e-4,
+                          flops_per_sec: float = 5e11,
+                          bytes_per_sec: float = 1e10) -> dict:
+    """Modeled seconds for ONE micro-batched scoring tick of ``batch``
+    requests.
+
+    Three terms: the fixed per-tick ``dispatch_s`` (jit call + launch —
+    paid once per tick regardless of batch); wire time for staging the
+    packed tile payload (the *padded* tile stream
+    ``ceil(batch / block_b) * ell_width`` tiles of ``block_b * block_d``
+    f32 values — padding slots cost bytes too, the serving face of the
+    load-imbalance story); and MXU time for the useful flops
+    (:func:`scoring_flops` over ``batch * nnz_per_req`` nonzeros).
+
+    Returns a dict with ``dispatch_s``, ``stage_s``, ``compute_s``,
+    ``total_s`` and ``per_request_s``.
+    """
+    n_row_blocks = -(-max(batch, 1) // block_b)
+    tile_bytes = n_row_blocks * ell_width * block_b * block_d \
+        * BYTES_PER_FLOAT
+    stage_s = tile_bytes / bytes_per_sec
+    compute_s = scoring_flops(int(batch * nnz_per_req)) / flops_per_sec
+    total = dispatch_s + stage_s + compute_s
+    return dict(dispatch_s=dispatch_s, stage_s=stage_s,
+                compute_s=compute_s, total_s=total,
+                per_request_s=total / max(batch, 1))
+
+
+def glm_serving_throughput(batch: int, nnz_per_req: float, *,
+                           ell_width: int, block_b: int, block_d: int,
+                           dispatch_s: float = 2e-4,
+                           flops_per_sec: float = 5e11,
+                           bytes_per_sec: float = 1e10) -> dict:
+    """Modeled requests/second of micro-batched vs sequential scoring.
+
+    ``batched_rps`` runs ticks of ``batch`` requests; ``sequential_rps``
+    runs batch-1 ticks (one dispatch *per request* — the degenerate
+    schedule the ``bench_serving`` gate compares against). Their ratio
+    ``speedup`` approaches ``dispatch_s / per_request_work`` as requests
+    shrink: the smaller the request, the more batching pays.
+    """
+    tick = glm_serving_tick_time(
+        batch, nnz_per_req, ell_width=ell_width, block_b=block_b,
+        block_d=block_d, dispatch_s=dispatch_s,
+        flops_per_sec=flops_per_sec, bytes_per_sec=bytes_per_sec)
+    single = glm_serving_tick_time(
+        1, nnz_per_req, ell_width=ell_width, block_b=block_b,
+        block_d=block_d, dispatch_s=dispatch_s,
+        flops_per_sec=flops_per_sec, bytes_per_sec=bytes_per_sec)
+    batched_rps = batch / tick["total_s"]
+    sequential_rps = 1.0 / single["total_s"]
+    return dict(batched_rps=batched_rps, sequential_rps=sequential_rps,
+                speedup=batched_rps / sequential_rps,
+                tick_s=tick["total_s"])

@@ -12,8 +12,26 @@ from __future__ import annotations
 import dataclasses
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.losses import Loss, get_loss
+
+
+def glm_margins(X, w) -> np.ndarray:
+    """Margins ``X^T w`` of a feature-major ``(d, n)`` matrix, dense or
+    sparse.
+
+    The one inference primitive everything in :mod:`repro.glm_serve`
+    reduces to: accepts a dense array or a
+    :class:`repro.data.sparse.CSRMatrix` (which stays sparse — one
+    O(nnz) pass via :meth:`CSRMatrix.xt_dot`) and returns a host
+    ``(n,)`` array.
+    """
+    from repro.data.sparse import CSRMatrix
+
+    if isinstance(X, CSRMatrix):
+        return X.xt_dot(w)
+    return np.asarray(X).T @ np.asarray(w)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,3 +87,41 @@ class GLMProblem:
         """Dense Hessian — only for tests / tiny problems."""
         c = self.hess_coeffs(w)
         return (self.X * c) @ self.X.T / self.n + self.lam * jnp.eye(self.d, dtype=self.X.dtype)
+
+    # -- inference ---------------------------------------------------------
+    def decision_function(self, w, X=None) -> np.ndarray:
+        """Margins ``X^T w`` for new data (default: the training data).
+
+        ``X`` may be a dense ``(d, n_new)`` array or a feature-major
+        :class:`repro.data.sparse.CSRMatrix` — both give identical
+        results (the dense-vs-sparse parity the serving engine's oracle
+        tests assert). Returns a host ``(n_new,)`` array.
+        """
+        return glm_margins(self.X if X is None else X, np.asarray(w))
+
+    def predict(self, w, X=None) -> np.ndarray:
+        """Predicted labels for a fitted ``w``.
+
+        Classification losses ('logistic', 'squared_hinge') return ±1
+        by the sign of the margin (ties break to +1, matching the
+        label convention); 'quadratic' returns the margin itself (a
+        regression fit predicts the real-valued response).
+        """
+        a = self.decision_function(w, X)
+        if self.loss.name == "quadratic":
+            return a
+        return np.where(a >= 0, 1.0, -1.0).astype(a.dtype)
+
+    def predict_proba(self, w, X=None) -> np.ndarray:
+        """P(y = +1 | x) under the logistic model: ``sigmoid(margin)``.
+
+        Only meaningful for the 'logistic' loss — other losses have no
+        probabilistic interpretation and raise ValueError.
+        """
+        if self.loss.name != "logistic":
+            raise ValueError(
+                f"predict_proba needs the 'logistic' loss, problem uses "
+                f"{self.loss.name!r}")
+        a = self.decision_function(w, X)
+        p = 1.0 / (1.0 + np.exp(-a.astype(np.float64)))
+        return p.astype(a.dtype)

@@ -160,6 +160,22 @@ class CSRMatrix:
         return CSRMatrix.from_coo(self.indices, rows, self.data, (n, d),
                                   dtype=self.data.dtype)
 
+    def xt_dot(self, w: np.ndarray) -> np.ndarray:
+        """Host-side margins ``X^T w`` of a feature-major ``(d, n)`` CSR.
+
+        One O(nnz) scatter-add pass, no transpose — the sparse half of
+        :meth:`repro.core.glm.GLMProblem.decision_function` and the
+        NumPy scoring oracle of :mod:`repro.glm_serve.scoring`.
+        Accumulates in float64 and casts back to the value dtype.
+        """
+        w = np.asarray(w)
+        d, n = self.shape
+        rows = np.repeat(np.arange(d), np.diff(self.indptr))
+        out = np.zeros(n, np.float64)
+        np.add.at(out, self.indices,
+                  self.data.astype(np.float64) * w.astype(np.float64)[rows])
+        return out.astype(self.data.dtype)
+
 
 # ---------------------------------------------------------------------------
 # blocked-ELL tiles (host side) + the device-side pytree

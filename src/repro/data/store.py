@@ -229,6 +229,104 @@ class ShardStore:
         cls._write_meta(path, axis, (d, n), X.dtype, chunk_size, infos)
         return cls(path)
 
+    def append_chunks(self, X_new: CSRMatrix, y_new: np.ndarray
+                      ) -> "ShardStore":
+        """Append new samples to a ``'samples'``-axis store in place.
+
+        The ingest half of the online refit loop
+        (:mod:`repro.glm_serve.refit`): newly arrived samples are
+        appended as additional chunks, the labels file is extended, and
+        the ``meta.json`` nnz-stats header is rewritten — after which
+        the store reads back exactly as if it had been built from the
+        concatenated dataset in one pass (the invariant
+        ``tests/test_store.py`` round-trips). The ragged final chunk, if
+        any, is rewritten merged with the head of the new data so chunk
+        ``c`` keeps covering indices ``[c * chunk_size,
+        (c+1) * chunk_size)`` — the contract both
+        :func:`repro.data.partition.chunk_partition` and the streaming
+        planner rely on.
+
+        Args:
+            X_new: feature-major ``(d, n_new)`` CSR of the new samples;
+                the feature dimension must match the store's.
+            y_new: ``(n_new,)`` labels of the new samples.
+
+        Returns:
+            self (header state refreshed), for chaining.
+
+        Raises:
+            ValueError: on a 'features'-axis store (appending samples
+                there would touch every chunk), a feature-dimension
+                mismatch, or a labels/samples length mismatch.
+        """
+        if self.axis != "samples":
+            raise ValueError(
+                "append_chunks needs a 'samples'-axis store (appending "
+                f"samples to a {self.axis!r}-chunked store would rewrite "
+                "every chunk); rebuild the store along 'samples'")
+        d, n = self.shape
+        y_new = np.asarray(y_new)
+        if X_new.shape[0] != d:
+            raise ValueError(
+                f"new samples have {X_new.shape[0]} features, store has "
+                f"{d}")
+        n_new = X_new.shape[1]
+        if y_new.shape != (n_new,):
+            raise ValueError(
+                f"labels shape {y_new.shape} != ({n_new},)")
+        if n_new == 0:
+            return self
+        if X_new.dtype != self.dtype:
+            # the meta.json dtype header describes EVERY chunk; a mixed
+            # append would silently break it (and the byte accounting)
+            X_new = CSRMatrix(indptr=X_new.indptr, indices=X_new.indices,
+                              data=np.asarray(X_new.data, self.dtype),
+                              shape=X_new.shape)
+
+        # rows of sample-axis chunks are samples: work on X_new^T
+        src = X_new.transpose()
+        infos = list(self.chunks)
+        start = n
+        first = 0
+        if infos and infos[-1].stop - infos[-1].start < self.chunk_size:
+            # merge the ragged tail chunk with the head of the new data
+            tail = infos.pop()
+            head = min(self.chunk_size - (tail.stop - tail.start), n_new)
+            old = self.chunk_csr(tail.index, mmap=False)
+            new = src.take_rows(np.arange(head))
+            merged_ptr = np.concatenate(
+                [np.asarray(old.indptr, np.int64),
+                 np.asarray(new.indptr[1:], np.int64) + old.nnz])
+            _write_chunk(self.path, tail.index, merged_ptr,
+                         np.concatenate([np.asarray(old.indices),
+                                         np.asarray(new.indices)]),
+                         np.concatenate([np.asarray(old.data),
+                                         np.asarray(new.data)]))
+            infos.append(ChunkInfo(index=tail.index, start=tail.start,
+                                   stop=tail.stop + head,
+                                   nnz=old.nnz + new.nnz))
+            start = tail.stop + head
+            first = head
+        for off in range(first, n_new, self.chunk_size):
+            stop_off = min(off + self.chunk_size, n_new)
+            slab = src.take_rows(np.arange(off, stop_off))
+            i = len(infos)
+            _write_chunk(self.path, i, slab.indptr, slab.indices,
+                         slab.data)
+            infos.append(ChunkInfo(index=i, start=start,
+                                   stop=start + (stop_off - off),
+                                   nnz=slab.nnz))
+            start += stop_off - off
+
+        old_y = np.asarray(self.labels(mmap=False))
+        y_all = np.concatenate([old_y, y_new.astype(old_y.dtype)])
+        np.save(os.path.join(self.path, _LABELS), y_all)
+        self.shape = (d, n + n_new)
+        self.chunks = infos
+        self._write_meta(self.path, self.axis, self.shape, self.dtype,
+                         self.chunk_size, infos)
+        return self
+
     @classmethod
     def from_libsvm(cls, libsvm_path: str, path: str,
                     axis: str = "samples", chunk_size: int = 8192,

@@ -1,0 +1,190 @@
+"""Model registry: versioned, atomically-published DiSCO checkpoints.
+
+Training (PR 1-3) produces a :class:`repro.core.disco.DiscoResult`; this
+module is where one *lives* so the serving plane can use it. A registry
+is a directory of immutable version snapshots plus a pointer to the
+active one:
+
+::
+
+    registry/
+      versions/
+        v000001/
+          model.json     header: format version, DiscoConfig, history,
+                         ledger, partition_info, stream_stats, converged
+          w.npy          the weight vector, byte-exact
+        v000002/ ...
+      ACTIVE             text file naming the active version
+
+Two invariants make hot-swap safe under concurrent readers:
+
+* **Atomic publish** — a snapshot is staged under a temp name and
+  ``os.rename``'d into ``versions/`` only when complete, so a reader
+  never sees a half-written version; the ``ACTIVE`` pointer is replaced
+  with ``os.replace`` (atomic on POSIX), so :meth:`active_version`
+  always reads a complete value.
+* **Immutability** — published snapshots are never modified; a refit
+  (:mod:`repro.glm_serve.refit`) publishes a *new* version and flips
+  ``ACTIVE``. Scoring engines poll :meth:`active_version` between ticks
+  (:meth:`repro.glm_serve.scoring.ScoringEngine.maybe_reload`) and keep
+  serving the old weights until the flip — model refresh without
+  pausing traffic.
+
+The weight vector round-trips **bit-identically** (``np.save`` of the
+raw array; the ``bench_serving`` gate asserts this), and the header
+carries enough to reconstruct the :class:`DiscoConfig` and
+:class:`DiscoResult` exactly (the communication ledger included).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+from repro.core.comm import CommLedger
+from repro.core.disco import DiscoConfig, DiscoResult
+
+REGISTRY_VERSION = 1
+_VERSIONS = "versions"
+_ACTIVE = "ACTIVE"
+_MODEL = "model.json"
+_WEIGHTS = "w.npy"
+
+
+@dataclasses.dataclass(frozen=True)
+class PublishedModel:
+    """One registry snapshot, loaded: the fitted weights + provenance."""
+
+    version: int              # registry version id (1-based, monotone)
+    w: np.ndarray             # (d,) weights, byte-exact round-trip
+    cfg: DiscoConfig          # the solve's hyperparameters
+    result: DiscoResult       # full training outcome (history, ledger..)
+
+    @property
+    def d(self) -> int:
+        """Feature dimension of the model."""
+        return int(self.w.shape[0])
+
+
+def _vdir(path: str, version: int) -> str:
+    return os.path.join(path, _VERSIONS, f"v{version:06d}")
+
+
+class ModelRegistry:
+    """Directory-backed model registry with atomic publish / hot swap.
+
+    Open (creating if absent) with ``ModelRegistry(path)``. Typical
+    producer flow::
+
+        reg = ModelRegistry("models/")
+        v = reg.publish(result, cfg)      # snapshot + flip ACTIVE
+
+    and consumer flow::
+
+        model = reg.load()                # the active version
+        old = reg.load(version=v - 1)     # any retained version
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+        os.makedirs(os.path.join(path, _VERSIONS), exist_ok=True)
+
+    # -- version listing ---------------------------------------------------
+    def versions(self) -> list[int]:
+        """Sorted ids of all published versions."""
+        out = []
+        for name in os.listdir(os.path.join(self.path, _VERSIONS)):
+            if name.startswith("v") and name[1:].isdigit():
+                out.append(int(name[1:]))
+        return sorted(out)
+
+    def active_version(self) -> int | None:
+        """Id of the active version, or None before the first publish."""
+        try:
+            with open(os.path.join(self.path, _ACTIVE)) as f:
+                return int(f.read().strip())
+        except FileNotFoundError:
+            return None
+
+    # -- publish / activate ------------------------------------------------
+    def publish(self, result: DiscoResult, cfg: DiscoConfig,
+                activate: bool = True) -> int:
+        """Snapshot a fit as the next version; optionally flip ACTIVE.
+
+        The snapshot is staged under ``versions/.tmp-<ver>`` and renamed
+        into place only when fully written, so concurrent readers never
+        observe a partial version. Returns the new version id.
+        """
+        vs = self.versions()
+        version = (vs[-1] + 1) if vs else 1
+        final = _vdir(self.path, version)
+        tmp = os.path.join(self.path, _VERSIONS, f".tmp-{version:06d}")
+        os.makedirs(tmp)
+        np.save(os.path.join(tmp, _WEIGHTS), np.asarray(result.w))
+        header = dict(
+            format_version=REGISTRY_VERSION,
+            version=version,
+            cfg=dataclasses.asdict(cfg),
+            converged=bool(result.converged),
+            history=result.history,
+            ledger=dict(rounds=result.ledger.rounds,
+                        floats=result.ledger.floats,
+                        spmd_collectives=result.ledger.spmd_collectives),
+            partition_info=result.partition_info,
+            stream_stats=result.stream_stats,
+        )
+        with open(os.path.join(tmp, _MODEL), "w") as f:
+            json.dump(header, f, indent=1, default=float)
+        os.rename(tmp, final)
+        if activate:
+            self.activate(version)
+        return version
+
+    def activate(self, version: int):
+        """Atomically point ACTIVE at an existing version (hot swap)."""
+        if not os.path.isdir(_vdir(self.path, version)):
+            raise ValueError(f"no published version {version} in "
+                             f"{self.path!r}")
+        tmp = os.path.join(self.path, f".{_ACTIVE}.tmp")
+        with open(tmp, "w") as f:
+            f.write(f"{version}\n")
+        os.replace(tmp, os.path.join(self.path, _ACTIVE))
+
+    # -- load --------------------------------------------------------------
+    def load(self, version: int | None = None) -> PublishedModel:
+        """Load a version (default: the active one) back into memory.
+
+        The returned :class:`PublishedModel` carries the weights
+        (bit-identical to what was published), the reconstructed
+        :class:`DiscoConfig` and a :class:`DiscoResult` equal to the
+        published one field for field.
+        """
+        if version is None:
+            version = self.active_version()
+            if version is None:
+                raise ValueError(f"registry {self.path!r} has no active "
+                                 "version (nothing published yet)")
+        vdir = _vdir(self.path, version)
+        with open(os.path.join(vdir, _MODEL)) as f:
+            header = json.load(f)
+        if header.get("format_version") != REGISTRY_VERSION:
+            raise ValueError(
+                f"version {version} has format "
+                f"{header.get('format_version')!r}; this reader supports "
+                f"format {REGISTRY_VERSION}")
+        w = np.load(os.path.join(vdir, _WEIGHTS))
+        cfg = DiscoConfig(**header["cfg"])
+        led = header["ledger"]
+        result = DiscoResult(
+            w=w,
+            history=header["history"],
+            ledger=CommLedger(rounds=int(led["rounds"]),
+                              floats=int(led["floats"]),
+                              spmd_collectives=int(led["spmd_collectives"])),
+            converged=bool(header["converged"]),
+            partition_info=header["partition_info"],
+            stream_stats=header["stream_stats"])
+        return PublishedModel(version=int(version), w=w, cfg=cfg,
+                              result=result)

@@ -1,4 +1,11 @@
-"""Serving substrate: jit'd serve_step + batched decode engine."""
+"""LEGACY LLM token-decode serving (model-zoo track).
+
+Not the paper-model inference plane: GLM scoring, the model registry,
+micro-batching and warm-start refits live in :mod:`repro.glm_serve`
+(docs/serving.md). This package decodes tokens from the
+``repro.models`` zoo — kept as the serving substrate of the LLM
+scale-up track.
+"""
 from repro.serve.engine import Engine, Request, Completion, make_serve_step
 
 __all__ = ["Engine", "Request", "Completion", "make_serve_step"]

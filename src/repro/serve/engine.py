@@ -1,4 +1,9 @@
-"""Serving: jit'd single-token ``serve_step`` + a batched decode engine.
+"""LEGACY LLM serving: jit'd single-token decode + a batched engine.
+
+Part of the model-zoo scale-up track, **not** the paper-model inference
+plane — GLM scoring/serving lives in :mod:`repro.glm_serve`
+(docs/serving.md). This engine decodes *tokens* from the transformer /
+SSM model zoo (`repro.models`).
 
 ``serve_step`` is what the decode input-shapes (decode_32k / long_500k)
 lower in the dry-run: ONE new token against a seq_len-deep KV/SSM cache.

@@ -1,4 +1,9 @@
-"""Continuous batching: slot-based scheduler over the cached decode step.
+"""LEGACY LLM continuous batching: slots over the cached decode step.
+
+Part of the model-zoo scale-up track, **not** the paper-model inference
+plane — the GLM micro-batching scheduler lives in
+:mod:`repro.glm_serve.scheduler` (docs/serving.md), which adapts this
+module's shape-stable-tick pattern to sparse scoring.
 
 The static-batch ``Engine`` decodes one request batch to completion; real
 serving interleaves arrivals. ``ContinuousEngine`` keeps B cache slots and,

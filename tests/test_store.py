@@ -123,6 +123,88 @@ def test_store_from_libsvm_features_axis_delegates(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# append (the refit loop's ingest path)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n0,n1,chunk", [
+    (10, 7, 4),    # ragged tail merged, then new chunks
+    (8, 5, 4),     # aligned tail: new chunks only
+    (3, 1, 8),     # everything fits in the (rewritten) first chunk
+    (6, 0, 4),     # empty append is a no-op
+])
+def test_store_append_chunks_roundtrip(tmp_path, n0, n1, chunk):
+    """append_chunks == building the store from the concatenated data:
+    same header (starts/stops/nnz), same chunks, same labels — the
+    header-rewrite round-trip the refit loop depends on."""
+    d = 9
+    rng = np.random.default_rng(n0 * 17 + n1)
+    Xd = np.where(rng.random((d, n0 + n1)) < 0.4,
+                  rng.standard_normal((d, n0 + n1)), 0.0
+                  ).astype(np.float32)
+    y = rng.standard_normal(n0 + n1).astype(np.float32)
+    X0 = CSRMatrix.from_dense(Xd[:, :n0])
+    X1 = CSRMatrix.from_dense(Xd[:, n0:])
+    store = ShardStore.from_csr(X0, y[:n0], str(tmp_path / "a"),
+                                axis="samples", chunk_size=chunk)
+    store.append_chunks(X1, y[n0:])
+    oracle = ShardStore.from_csr(CSRMatrix.from_dense(Xd), y,
+                                 str(tmp_path / "b"), axis="samples",
+                                 chunk_size=chunk)
+    assert store.shape == oracle.shape == (d, n0 + n1)
+    assert [(c.start, c.stop, c.nnz) for c in store.chunks] \
+        == [(c.start, c.stop, c.nnz) for c in oracle.chunks]
+    X2, y2 = store.to_csr()
+    np.testing.assert_array_equal(X2.todense(), Xd)
+    np.testing.assert_array_equal(y2, y)
+    # the rewritten header must also survive a fresh open
+    reopened = ShardStore(store.path)
+    assert reopened.shape == (d, n0 + n1)
+    assert reopened.nnz == oracle.nnz
+    X3, y3 = reopened.to_csr()
+    np.testing.assert_array_equal(X3.todense(), Xd)
+    np.testing.assert_array_equal(y3, y)
+
+
+def test_store_append_chunks_rejects_bad_input(tmp_path):
+    X, _ = _random_csr(6, 8, 0.4, seed=8)
+    y = np.zeros(8, np.float32)
+    samples = ShardStore.from_csr(X, y, str(tmp_path / "s"),
+                                  axis="samples", chunk_size=4)
+    feats = ShardStore.from_csr(X, y, str(tmp_path / "f"),
+                                axis="features", chunk_size=4)
+    Xn, _ = _random_csr(6, 3, 0.4, seed=9)
+    with pytest.raises(ValueError, match="samples"):
+        feats.append_chunks(Xn, np.zeros(3, np.float32))
+    bad_d, _ = _random_csr(5, 3, 0.4, seed=10)
+    with pytest.raises(ValueError, match="features"):
+        samples.append_chunks(bad_d, np.zeros(3, np.float32))
+    with pytest.raises(ValueError, match="labels"):
+        samples.append_chunks(Xn, np.zeros(2, np.float32))
+
+
+def test_store_append_chunks_casts_to_store_dtype(tmp_path):
+    """Appending a float64 slab to a float32 store must not produce
+    mixed-dtype chunks: the meta.json dtype header describes every
+    chunk, and the byte accounting depends on it."""
+    rng = np.random.default_rng(11)
+    Xd = np.where(rng.random((5, 10)) < 0.5,
+                  rng.standard_normal((5, 10)), 0.0)
+    store = ShardStore.from_csr(
+        CSRMatrix.from_dense(Xd[:, :6], dtype=np.float32),
+        np.zeros(6, np.float32), str(tmp_path / "s"), axis="samples",
+        chunk_size=4)
+    store.append_chunks(CSRMatrix.from_dense(Xd[:, 6:], dtype=np.float64),
+                        np.zeros(4, np.float64))
+    assert store.dtype == np.float32
+    for c in store.chunks:
+        assert store.chunk_csr(c.index).dtype == np.float32
+    X2, y2 = store.to_csr()
+    assert X2.dtype == np.float32 and y2.dtype == np.float32
+    np.testing.assert_allclose(X2.todense(), Xd.astype(np.float32),
+                               rtol=1e-6, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
 # hypothesis round-trip: CSRMatrix -> ShardStore -> CSRMatrix
 # ---------------------------------------------------------------------------
 

@@ -8,7 +8,8 @@ Three checks, all fail-fast with a nonzero exit:
    (anchors are stripped; http(s)/mailto links are ignored).
 2. **Public docstrings**: every symbol exported via ``__all__`` from the
    public packages (``repro.core``, ``repro.data``, ``repro.kernels``,
-   ``repro.utils``) must carry a non-empty docstring, and so must every
+   ``repro.utils``, ``repro.glm_serve``) must carry a non-empty
+   docstring, and so must every
    public function of the cost model ``repro.core.comm`` and the kernel
    entry points in ``repro.kernels.ops``.
 3. **Benchmark gates**: every ``bench_<name>`` benchmark documented in
@@ -31,7 +32,7 @@ SKIP_MD = {"CHANGES.md"}                    # running log, not documentation
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 
 PUBLIC_PACKAGES = ["repro.core", "repro.data", "repro.kernels",
-                   "repro.utils"]
+                   "repro.utils", "repro.glm_serve"]
 FUNCTION_MODULES = ["repro.core.comm", "repro.kernels.ops"]
 
 

@@ -120,6 +120,17 @@ def run(quiet=False):
         parity = float(np.abs(got - want).max()) / denom
         gate["parity"] = dict(rel_err=parity, ok=parity <= 1e-5)
 
+        # -- bf16 tile scoring parity (mixed-precision serving path) ------
+        engine_bf = ScoringEngine(reg, batch=BATCH, block_b=BLOCK_B,
+                                  block_d=BLOCK_D, hvp_dtype="bfloat16")
+        got_bf = engine_bf.score(requests)
+        parity_bf = float(np.abs(got_bf - want).max()) / denom
+        # bf16 mantissa is 8 bits: per-request dots should stay within
+        # ~2^-8 of the oracle (both MXU operands round to bf16, the
+        # accumulator and output stay f32 — docs/kernels.md)
+        gate["parity_bf16"] = dict(rel_err=parity_bf,
+                                   ok=parity_bf <= 2e-2)
+
         # -- micro-batched vs sequential throughput -----------------------
         t_b, stats = _time_batched(engine, requests)
         seq_engine = ScoringEngine(reg, batch=1, block_b=1,
@@ -150,7 +161,7 @@ def run(quiet=False):
 
     rows = [dict(
         stage="serve", d=D, n=N, reqs=N_REQS, batch=BATCH,
-        parity_rel_err=parity,
+        parity_rel_err=parity, parity_bf16_rel_err=parity_bf,
         batched_s=round(t_b, 4), sequential_s=round(t_s, 4),
         speedup=round(speedup, 2),
         model_speedup=round(model["speedup"], 1),
@@ -162,10 +173,11 @@ def run(quiet=False):
         fit_s=round(t_fit.elapsed, 2))]
 
     ok = (gate["registry"]["bit_identical"] and gate["parity"]["ok"]
-          and gate["throughput"]["ok"] and gate["refit"]["ok"]
-          and swapped)
+          and gate["parity_bf16"]["ok"] and gate["throughput"]["ok"]
+          and gate["refit"]["ok"] and swapped)
     out = table(rows, ["stage", "d", "n", "reqs", "batch",
-                       "parity_rel_err", "batched_s", "sequential_s",
+                       "parity_rel_err", "parity_bf16_rel_err",
+                       "batched_s", "sequential_s",
                        "speedup", "model_speedup", "p50_ms", "p99_ms",
                        "rps", "warm_iters", "cold_iters", "warm_s",
                        "cold_s", "fit_s"],
@@ -176,6 +188,8 @@ def run(quiet=False):
         print(f"[gate] registry round-trip bit-identical: "
               f"{gate['registry']['bit_identical']}")
         print(f"[gate] scoring parity rel_err={parity:.2e} (need <=1e-5)")
+        print(f"[gate] bf16-tile scoring parity rel_err={parity_bf:.2e} "
+              f"(need <=2e-2)")
         print(f"[gate] micro-batched speedup {speedup:.1f}x "
               f"(need >=4x; model predicts "
               f"{model['speedup']:.0f}x)")

@@ -24,6 +24,67 @@ def save_json(name: str, payload):
     return path
 
 
+# ---------------------------------------------------------------------------
+# machine-readable perf-trajectory records (BENCH_<name>.json)
+#
+# Gated perf benchmarks additionally emit a flat, schema-validated record
+# so future PRs can chart the perf trend across commits without parsing
+# console tables. Shape: {"bench": str, "rows": [flat dict, ...], ...}
+# where every row value is a JSON scalar (str/int/float/bool/None).
+# ---------------------------------------------------------------------------
+
+def bench_record_path(name: str) -> str:
+    """Path of the ``BENCH_<name>.json`` perf-trajectory record."""
+    return os.path.join(RESULTS_DIR, f"BENCH_{name}.json")
+
+
+def validate_bench_record(payload) -> None:
+    """Raise ValueError unless ``payload`` is a well-formed bench record.
+
+    Required: ``bench`` (non-empty str) and ``rows`` (non-empty list of
+    flat dicts whose values are JSON scalars). Extra top-level keys are
+    allowed (gate summaries etc.) but must be JSON-serializable.
+    """
+    if not isinstance(payload, dict):
+        raise ValueError(f"bench record must be a dict, got "
+                         f"{type(payload).__name__}")
+    if not isinstance(payload.get("bench"), str) or not payload["bench"]:
+        raise ValueError("bench record needs a non-empty 'bench' name")
+    rows = payload.get("rows")
+    if not isinstance(rows, list) or not rows:
+        raise ValueError("bench record needs a non-empty 'rows' list")
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict):
+            raise ValueError(f"rows[{i}] must be a dict")
+        for k, v in row.items():
+            if not isinstance(k, str):
+                raise ValueError(f"rows[{i}] has a non-string key {k!r}")
+            if not isinstance(v, (str, int, float, bool, type(None))):
+                raise ValueError(
+                    f"rows[{i}][{k!r}] must be a JSON scalar, got "
+                    f"{type(v).__name__}")
+
+
+def write_bench_record(name: str, payload: dict) -> str:
+    """Validate and write ``BENCH_<name>.json`` (the shared writer every
+    perf benchmark uses, so all trajectory records share one schema)."""
+    validate_bench_record(payload)
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = bench_record_path(name)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
+def load_bench_record(name: str) -> dict:
+    """Read ``BENCH_<name>.json`` back, re-validating the schema — what
+    ``bench-smoke`` runs to assert the emitted record is well-formed."""
+    with open(bench_record_path(name)) as f:
+        payload = json.load(f)
+    validate_bench_record(payload)
+    return payload
+
+
 def table(rows: list[dict], cols: list[str], title: str = "") -> str:
     widths = {c: max(len(c), *(len(_fmt(r.get(c, ""))) for r in rows))
               for c in cols}

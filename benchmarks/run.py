@@ -24,8 +24,8 @@ def main(argv=None):
                          "REPRO_BENCH_SMOKE=1)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig3,fig4,fig5,table4,"
-                         "sstep,loadbalance,streaming,serving,woodbury,"
-                         "amdahl,roofline")
+                         "sstep,loadbalance,streaming,serving,hvp_fused,"
+                         "woodbury,amdahl,roofline")
     args = ap.parse_args(argv)
 
     if args.smoke:
@@ -40,7 +40,7 @@ def main(argv=None):
         if args.quick and not args.smoke:
             # these run many full fits (or a forced-8-device subprocess)
             return name not in ("fig3", "sstep", "loadbalance",
-                                "streaming", "serving")
+                                "streaming", "serving", "hvp_fused")
         return True
 
     t0 = time.perf_counter()
@@ -67,6 +67,10 @@ def main(argv=None):
     if want("serving"):
         from benchmarks import bench_serving
         bench_serving.run()
+        print()
+    if want("hvp_fused"):
+        from benchmarks import bench_hvp_fused
+        bench_hvp_fused.run()
         print()
     if want("woodbury"):
         from benchmarks import bench_woodbury

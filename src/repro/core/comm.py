@@ -133,6 +133,59 @@ def sparse_hvp_flops(nnz: int) -> int:
     return 4 * nnz
 
 
+# ---------------------------------------------------------------------------
+# HVP HBM-traffic model (docs/kernels.md; gate: benchmarks/bench_hvp_fused)
+#
+# The HVP is memory-bound (~2 flops/byte at f32), so the bytes the data
+# tiles move through HBM — not the flops — bound the PCG inner loop. The
+# two levers this model prices: the fused ONE-PASS kernels read the X
+# tiles once per application instead of twice, and bf16 tile storage
+# (DiscoConfig.hvp_dtype) halves the bytes per element again.
+# ---------------------------------------------------------------------------
+
+BYTES_BF16 = 2
+
+
+def hvp_dtype_bytes(hvp_dtype: str) -> int:
+    """Bytes per stored tile element for a ``DiscoConfig.hvp_dtype``.
+
+    Resolved through :func:`repro.data.sparse.hvp_tile_dtype` (lazy
+    import) so the cost model and the tile builders can never disagree
+    on the accepted dtype spellings or widths.
+    """
+    from repro.data.sparse import hvp_tile_dtype
+    return int(hvp_tile_dtype(hvp_dtype).itemsize)
+
+
+def dense_hvp_bytes(d: int, n: int, s: int = 1, *, fused: bool = False,
+                    dtype_bytes: int = BYTES_PER_FLOAT) -> int:
+    """X-tile HBM bytes of ONE dense (multi-)HVP application.
+
+    The two-pass kernels stream the full (d, n) tile set twice (pass A
+    ``X^T u``, pass B ``X (c.*z)``); the fused one-pass kernel streams
+    it once. The s probe vectors of a multi-HVP share the same tile
+    stream either way (the s-step amortization), so ``s`` does not
+    appear — it raises arithmetic intensity, not bytes.
+    """
+    del s  # tiles are shared across probe vectors; bytes are per pass
+    passes = 1 if fused else 2
+    return passes * d * n * dtype_bytes
+
+
+def ell_hvp_bytes(tiles_fwd: int, tiles_tr: int, block_rows: int,
+                  block_cols: int, *, fused: bool = False,
+                  dtype_bytes: int = BYTES_PER_FLOAT) -> int:
+    """Blocked-ELL tile HBM bytes of ONE sparse (multi-)HVP application.
+
+    ``tiles_fwd``/``tiles_tr`` are the *padded* tile counts of the
+    forward and transposed layouts (``n_row_blocks * width`` each). The
+    two-pass pair reads both layouts once; the fused kernel reads only
+    the transposed layout — the forward tiles are never touched.
+    """
+    tile = block_rows * block_cols * dtype_bytes
+    return (tiles_tr if fused else tiles_fwd + tiles_tr) * tile
+
+
 def straggler_factor(shard_nnz) -> float:
     """max_shard_nnz / mean_shard_nnz: the factor by which barrier
     collectives stretch the compute phase of a skewed partition (1.0 is a
@@ -148,18 +201,27 @@ def disco_sparse_iter_time(shard_nnz, pcg_iters: int, partition: str,
                            n: int, d: int, m: int, s: int = 1, *,
                            flops_per_sec: float = 5e11,
                            bytes_per_sec: float = 1e10,
-                           latency_s: float = 5e-6) -> dict:
+                           latency_s: float = 5e-6,
+                           hvp_fused: bool = False,
+                           hvp_dtype_bytes: int = BYTES_PER_FLOAT,
+                           hbm_bytes_per_sec: float = 8e11) -> dict:
     """Modeled seconds for ONE Newton iteration on a sparse partition.
 
     compute: (pcg_iters + 1) HVP applications (PCG loop + the margins/
-    gradient pass), each costing :func:`sparse_hvp_flops` of the
-    *heaviest* shard — the straggler gates every barrier.
+    gradient pass), each the *heavier* of its MXU time
+    (:func:`sparse_hvp_flops`) and its HBM time (the value bytes the
+    tile stream moves: one pass over the nonzeros when ``hvp_fused``,
+    two otherwise, at ``hvp_dtype_bytes`` per element) on the heaviest
+    shard — the straggler gates every barrier, and the HVP is
+    memory-bound, so the bytes term usually wins.
     comm: the paper-style (rounds, floats) of the matching cost function
     above, charged ``latency_s`` per round plus wire time.
 
-    Returns a dict with ``compute_s``, ``comm_s``, ``total_s`` and
-    ``straggler`` so benchmarks can attribute the win of LPT balancing
-    (``benchmarks/bench_loadbalance.py``).
+    Returns a dict with ``compute_s``, ``hvp_bytes`` (per application),
+    ``comm_s``, ``total_s`` and ``straggler`` so benchmarks can
+    attribute the win of LPT balancing
+    (``benchmarks/bench_loadbalance.py``) and of the fused/bf16 HVP
+    (``benchmarks/bench_hvp_fused.py``).
     """
     shard_nnz = np.asarray(shard_nnz, np.float64)
     max_nnz = float(shard_nnz.max()) if len(shard_nnz) else 0.0
@@ -180,10 +242,13 @@ def disco_sparse_iter_time(shard_nnz, pcg_iters: int, partition: str,
         raise ValueError(f"unknown partition {partition!r}")
 
     hvp_apps = pcg_iters * max(s, 1) + 1
-    compute_s = hvp_apps * sparse_hvp_flops(int(max_nnz)) / flops_per_sec
+    hvp_bytes = (1 if hvp_fused else 2) * max_nnz * hvp_dtype_bytes
+    per_app = max(sparse_hvp_flops(int(max_nnz)) / flops_per_sec,
+                  hvp_bytes / hbm_bytes_per_sec)
+    compute_s = hvp_apps * per_app
     comm_s = (r1 + r2) * latency_s \
         + (f1 + f2) * BYTES_PER_FLOAT / bytes_per_sec
-    return dict(compute_s=compute_s, comm_s=comm_s,
+    return dict(compute_s=compute_s, hvp_bytes=hvp_bytes, comm_s=comm_s,
                 total_s=compute_s + comm_s,
                 straggler=straggler_factor(shard_nnz))
 
@@ -226,7 +291,10 @@ def disco_streaming_iter_time(shard_nnz, pcg_iters: int, partition: str,
                               flops_per_sec: float = 5e11,
                               bytes_per_sec: float = 1e10,
                               latency_s: float = 5e-6,
-                              disk_bytes_per_sec: float = 2e9) -> dict:
+                              disk_bytes_per_sec: float = 2e9,
+                              hvp_fused: bool = False,
+                              hvp_dtype_bytes: int = BYTES_PER_FLOAT,
+                              hbm_bytes_per_sec: float = 8e11) -> dict:
     """Modeled seconds for ONE Newton iteration of a *streaming* solve.
 
     Extends :func:`disco_sparse_iter_time` with the I/O plane: every data
@@ -234,7 +302,10 @@ def disco_streaming_iter_time(shard_nnz, pcg_iters: int, partition: str,
     (``STREAM_BYTES_PER_NNZ`` per nonzero), and the prefetch pipeline
     credits I/O–compute overlap: the streamed phase costs
     ``max(io_s, compute_s)`` plus a pipeline fill of ``prefetch_depth``
-    chunks per pass, instead of ``io_s + compute_s``.
+    chunks per pass, instead of ``io_s + compute_s``. The ``hvp_*``
+    levers reach the compute/HBM term through the base model; disk
+    bytes are unchanged (chunks are stored f32 CSR regardless — the
+    fused/bf16 win is in the staged tile plane, not the disk format).
 
     Returns a dict with ``io_s``, ``compute_s``, ``comm_s``, ``fill_s``,
     the overlapped ``total_s``, the naive ``total_no_overlap_s``, and
@@ -243,7 +314,9 @@ def disco_streaming_iter_time(shard_nnz, pcg_iters: int, partition: str,
     base = disco_sparse_iter_time(
         shard_nnz, pcg_iters, partition, n=n, d=d, m=m, s=s,
         flops_per_sec=flops_per_sec, bytes_per_sec=bytes_per_sec,
-        latency_s=latency_s)
+        latency_s=latency_s, hvp_fused=hvp_fused,
+        hvp_dtype_bytes=hvp_dtype_bytes,
+        hbm_bytes_per_sec=hbm_bytes_per_sec)
     shard_nnz = np.asarray(shard_nnz, np.float64)
     max_nnz = float(shard_nnz.max()) if len(shard_nnz) else 0.0
     passes = streaming_data_passes(partition, pcg_iters, s)

@@ -30,7 +30,7 @@ from repro.core.losses import get_loss
 from repro.core.pcg import pcg_features, pcg_samples
 from repro.data.partition import Partition, make_partition
 from repro.data.sparse import (CSRMatrix, EllPair, build_shard_ell_pairs,
-                               shard_csrs_from_partition)
+                               hvp_tile_dtype, shard_csrs_from_partition)
 from repro.utils.compat import shard_map
 from repro.utils.padding import pad_to_multiple
 
@@ -62,6 +62,21 @@ class DiscoConfig:
         use_kernel: route dense HVPs through the Pallas kernels
             (kernels/glm_hvp.py). Ignored for sparse inputs — the
             blocked-ELL ops always dispatch by ``REPRO_KERNEL_MODE``.
+        hvp_fused: one-pass fused HVP kernels (docs/kernels.md):
+            wherever no collective separates the two HVP directions
+            (every DiSCO-S local product, single-shard DiSCO-F, the
+            s-step zero-communication basis operators) both passes run
+            from the same resident tiles, halving HBM reads of X per
+            application. f32 results are identical to the two-pass path
+            (bit-identical under ``REPRO_KERNEL_MODE=ref``). Applies to
+            the sparse/ELL and dense-``use_kernel`` paths.
+        hvp_dtype: tile storage dtype of the HVP operands, 'float32'
+            (default) or 'bfloat16'. bf16 halves the bytes the PCG inner
+            loop streams; kernels accumulate in f32 and every
+            first-order quantity (margins, gradient, PCG state, the
+            preconditioner slab) stays f32, so the Newton iteration
+            converges to the f32 optimum — the bf16 rounding perturbs
+            only the curvature, like Hessian subsampling (paper §5.4).
         pcg_block_s: s-step (communication-avoiding) PCG: Krylov
             dimensions advanced per communication round (DESIGN.md §2);
             1 = classic PCG.
@@ -100,6 +115,8 @@ class DiscoConfig:
     hessian_subsample: float = 1.0  # paper §5.4; fraction of samples in H u
     sag_epochs: int = 5             # inner epochs for the 'sag' baseline
     use_kernel: bool = False        # Pallas glm_hvp in the PCG hot path
+    hvp_fused: bool = False         # one-pass fused HVP (docs/kernels.md)
+    hvp_dtype: str = "float32"      # HVP tile storage: float32 | bfloat16
     pcg_block_s: int = 1            # s-step PCG: Krylov vectors per comm round
     partition_strategy: str = "lpt"  # sparse: 'lpt' (nnz-balanced) | 'width'
     partition_block: int = 1        # nnz-balancer granularity (indices/block)
@@ -216,6 +233,8 @@ class DiscoSolver:
         X_tau = X[:, : self.tau].copy()
         y_tau = y[: self.tau].copy()
 
+        hdt = hvp_tile_dtype(cfg.hvp_dtype)
+
         if cfg.partition == "features":
             Xp, self._dpad = pad_to_multiple(X, 0, self.m)
             self.d_padded = Xp.shape[0]
@@ -249,6 +268,12 @@ class DiscoSolver:
         else:
             raise ValueError(f"unknown partition {cfg.partition!r}")
 
+        # mixed-precision HVP copy of X (docs/kernels.md): the PCG inner
+        # loop streams this; margins/gradient/preconditioner stay on the
+        # f32 original. Same object when hvp_dtype is the data dtype, so
+        # the default costs nothing.
+        self.X_hvp = self.X if self.X.dtype == hdt else self.X.astype(hdt)
+
     def _init_sparse(self, X: CSRMatrix, y):
         """Partition (load-balanced), tile, and shard a sparse matrix.
 
@@ -267,6 +292,8 @@ class DiscoSolver:
         X_tau = X.take_cols_dense(np.arange(self.tau))          # (d, tau)
         y_tau = y[: self.tau].copy()
         rep = NamedSharding(self.mesh, P())
+
+        hdt = hvp_tile_dtype(cfg.hvp_dtype)
 
         if cfg.partition == "features":
             part = make_partition(X, "features", m,
@@ -332,6 +359,20 @@ class DiscoSolver:
             raise ValueError(f"unknown partition {cfg.partition!r}")
         self._part = part
 
+        # mixed-precision HVP tile copies (docs/kernels.md): the PCG loop
+        # streams these; margins/gradient keep the f32 layouts and the
+        # cols arrays are shared (int32 either way). Same objects at the
+        # default hvp_dtype, so f32 costs nothing.
+        if data.dtype == hdt:
+            self.ell_data_h = self.ell_data
+            self.ell_dataT_h = self.ell_dataT
+        else:
+            es = NamedSharding(self.mesh, P(axis, None, None, None, None))
+            self.ell_data_h = jax.device_put(
+                jnp.asarray(data.astype(hdt)), es)
+            self.ell_dataT_h = jax.device_put(
+                jnp.asarray(dataT.astype(hdt)), es)
+
     # ------------------------------------------------------------------
     def _build_step(self):
         if self._sparse:
@@ -341,7 +382,7 @@ class DiscoSolver:
         frac = cfg.hessian_subsample
 
         if cfg.partition == "features":
-            def step_local(X_loc, X_tau_loc, y, y_tau, w_loc, key):
+            def step_local(X_loc, Xh_loc, X_tau_loc, y, y_tau, w_loc, key):
                 margins = lax.psum(X_loc.T @ w_loc, axis)           # (n,)
                 d1 = loss.d1(margins, y)
                 c = loss.d2(margins, y)
@@ -357,12 +398,16 @@ class DiscoSolver:
                     c_eff = c
                 coeffs_tau = loss.d2(margins[:tau], y_tau)
 
+                # the PCG loop streams the (possibly bf16) HVP copy; the
+                # f32 tau slab feeds the preconditioner
                 eps = cfg.pcg_rel_tol * gnorm
                 res = pcg_features(
-                    X_loc, c_eff, n, cfg.lam, g_loc, eps, cfg.max_pcg,
+                    Xh_loc, c_eff, n, cfg.lam, g_loc, eps, cfg.max_pcg,
                     tau_idx=jnp.arange(tau), coeffs_tau=coeffs_tau,
                     mu=cfg.mu, axis_name=axis, precond=cfg.precond,
-                    use_kernel=cfg.use_kernel, block_s=cfg.pcg_block_s)
+                    use_kernel=cfg.use_kernel, block_s=cfg.pcg_block_s,
+                    X_tau_loc=X_tau_loc, axis_size=self.m,
+                    hvp_fused=cfg.hvp_fused)
                 w_new = w_loc - res.v / (1.0 + res.delta)
                 stats = dict(grad_norm=gnorm, f=fval, pcg_iters=res.iters,
                              delta=res.delta, pcg_r_norm=res.r_norm)
@@ -370,15 +415,18 @@ class DiscoSolver:
 
             fn = shard_map(
                 step_local, mesh=self.mesh,
-                in_specs=(P(axis, None), P(axis, None), P(), P(), P(axis), P()),
+                in_specs=(P(axis, None), P(axis, None), P(axis, None),
+                          P(), P(), P(axis), P()),
                 out_specs=(P(axis), P()),
                 check_vma=False)  # pallas_call outputs carry no vma info
 
             def step(w, key):
-                return fn(self.X, self.X_tau, self.y, self.y_tau, w, key)
+                return fn(self.X, self.X_hvp, self.X_tau, self.y,
+                          self.y_tau, w, key)
 
         else:  # samples
-            def step_local(X_loc, y_loc, wts_loc, X_tau, y_tau, w, key):
+            def step_local(X_loc, Xh_loc, y_loc, wts_loc, X_tau, y_tau, w,
+                           key):
                 margins = X_loc.T @ w                                # (n_loc,)
                 d1 = loss.d1(margins, y_loc) * wts_loc
                 c = loss.d2(margins, y_loc) * wts_loc
@@ -396,11 +444,12 @@ class DiscoSolver:
 
                 eps = cfg.pcg_rel_tol * gnorm
                 res = pcg_samples(
-                    X_loc, c_eff, n, cfg.lam, g, eps, cfg.max_pcg,
+                    Xh_loc, c_eff, n, cfg.lam, g, eps, cfg.max_pcg,
                     X_tau=X_tau, coeffs_tau=coeffs_tau, mu=cfg.mu,
                     axis_name=axis, precond=cfg.precond,
                     sag_epochs=cfg.sag_epochs, use_kernel=cfg.use_kernel,
-                    block_s=cfg.pcg_block_s, axis_size=self.m)
+                    block_s=cfg.pcg_block_s, axis_size=self.m,
+                    hvp_fused=cfg.hvp_fused)
                 w_new = w - res.v / (1.0 + res.delta)
                 stats = dict(grad_norm=gnorm, f=fval, pcg_iters=res.iters,
                              delta=res.delta, pcg_r_norm=res.r_norm)
@@ -408,13 +457,14 @@ class DiscoSolver:
 
             fn = shard_map(
                 step_local, mesh=self.mesh,
-                in_specs=(P(None, axis), P(axis), P(axis), P(), P(), P(), P()),
+                in_specs=(P(None, axis), P(None, axis), P(axis), P(axis),
+                          P(), P(), P(), P()),
                 out_specs=(P(), P()),
                 check_vma=False)  # pallas_call outputs carry no vma info
 
             def step(w, key):
-                return fn(self.X, self.y, self.weights, self.X_tau,
-                          self.y_tau, w, key)
+                return fn(self.X, self.X_hvp, self.y, self.weights,
+                          self.X_tau, self.y_tau, w, key)
 
         return jax.jit(step)
 
@@ -430,9 +480,11 @@ class DiscoSolver:
         from repro.kernels import ops as kops
 
         if cfg.partition == "features":
-            def step_local(ed, ec, edT, ecT, X_tau_loc, y, y_tau, smask,
-                           w_loc, key):
+            def step_local(ed, ec, edT, ecT, edh, edTh, X_tau_loc, y,
+                           y_tau, smask, w_loc, key):
                 ell = EllPair(ed[0], ec[0], edT[0], ecT[0])
+                # HVP twin: (possibly bf16) tile copies, shared cols
+                ell_h = EllPair(edh[0], ec[0], edTh[0], ecT[0])
                 margins = lax.psum(
                     kops.ell_matvec(ell.dataT, ell.colsT, w_loc), axis)
                 d1 = loss.d1(margins, y) * smask
@@ -452,10 +504,11 @@ class DiscoSolver:
 
                 eps = cfg.pcg_rel_tol * gnorm
                 res = pcg_features(
-                    ell, c_eff, n, cfg.lam, g_loc, eps, cfg.max_pcg,
+                    ell_h, c_eff, n, cfg.lam, g_loc, eps, cfg.max_pcg,
                     coeffs_tau=coeffs_tau, mu=cfg.mu, axis_name=axis,
                     precond=cfg.precond, block_s=cfg.pcg_block_s,
-                    X_tau_loc=X_tau_loc)
+                    X_tau_loc=X_tau_loc, axis_size=self.m,
+                    hvp_fused=cfg.hvp_fused)
                 w_new = w_loc - res.v / (1.0 + res.delta)
                 stats = dict(grad_norm=gnorm, f=fval, pcg_iters=res.iters,
                              delta=res.delta, pcg_r_norm=res.r_norm)
@@ -465,19 +518,23 @@ class DiscoSolver:
                 step_local, mesh=self.mesh,
                 in_specs=(P(axis, None, None, None, None), P(axis, None),
                           P(axis, None, None, None, None), P(axis, None),
+                          P(axis, None, None, None, None),
+                          P(axis, None, None, None, None),
                           P(axis, None), P(), P(), P(), P(axis), P()),
                 out_specs=(P(axis), P()),
                 check_vma=False)  # pallas_call outputs carry no vma info
 
             def step(w, key):
                 return fn(self.ell_data, self.ell_cols, self.ell_dataT,
-                          self.ell_colsT, self.X_tau, self.y, self.y_tau,
-                          self.smask, w, key)
+                          self.ell_colsT, self.ell_data_h,
+                          self.ell_dataT_h, self.X_tau, self.y,
+                          self.y_tau, self.smask, w, key)
 
         else:  # samples
-            def step_local(ed, ec, edT, ecT, y_loc, wts_loc, X_tau, y_tau,
-                           w, key):
+            def step_local(ed, ec, edT, ecT, edh, edTh, y_loc, wts_loc,
+                           X_tau, y_tau, w, key):
                 ell = EllPair(ed[0], ec[0], edT[0], ecT[0])
+                ell_h = EllPair(edh[0], ec[0], edTh[0], ecT[0])
                 margins = kops.ell_matvec(ell.dataT, ell.colsT, w)
                 d1 = loss.d1(margins, y_loc) * wts_loc
                 c = loss.d2(margins, y_loc) * wts_loc
@@ -498,11 +555,12 @@ class DiscoSolver:
 
                 eps = cfg.pcg_rel_tol * gnorm
                 res = pcg_samples(
-                    ell, c_eff, n, cfg.lam, g, eps, cfg.max_pcg,
+                    ell_h, c_eff, n, cfg.lam, g, eps, cfg.max_pcg,
                     X_tau=X_tau, coeffs_tau=coeffs_tau, mu=cfg.mu,
                     axis_name=axis, precond=cfg.precond,
                     sag_epochs=cfg.sag_epochs,
-                    block_s=cfg.pcg_block_s, axis_size=self.m)
+                    block_s=cfg.pcg_block_s, axis_size=self.m,
+                    hvp_fused=cfg.hvp_fused)
                 w_new = w - res.v / (1.0 + res.delta)
                 stats = dict(grad_norm=gnorm, f=fval, pcg_iters=res.iters,
                              delta=res.delta, pcg_r_norm=res.r_norm)
@@ -512,14 +570,17 @@ class DiscoSolver:
                 step_local, mesh=self.mesh,
                 in_specs=(P(axis, None, None, None, None), P(axis, None),
                           P(axis, None, None, None, None), P(axis, None),
+                          P(axis, None, None, None, None),
+                          P(axis, None, None, None, None),
                           P(axis), P(axis), P(), P(), P(), P()),
                 out_specs=(P(), P()),
                 check_vma=False)  # pallas_call outputs carry no vma info
 
             def step(w, key):
                 return fn(self.ell_data, self.ell_cols, self.ell_dataT,
-                          self.ell_colsT, self.y, self.weights, self.X_tau,
-                          self.y_tau, w, key)
+                          self.ell_colsT, self.ell_data_h,
+                          self.ell_dataT_h, self.y, self.weights,
+                          self.X_tau, self.y_tau, w, key)
 
         return jax.jit(step)
 
@@ -573,7 +634,8 @@ class DiscoSolver:
         self._plan = plan_streams(
             store, self.m, cfg.partition_strategy,
             block_rows=cfg.ell_block_d, block_cols=cfg.ell_block_n,
-            prefetch_depth=cfg.prefetch_depth, device_put=put)
+            prefetch_depth=cfg.prefetch_depth, device_put=put,
+            hvp_dtype=hvp_tile_dtype(cfg.hvp_dtype))
         self._part = self._plan.partition
         self._init_streaming()
         self._step = self._build_step_streaming()
@@ -650,13 +712,14 @@ class DiscoSolver:
         start = s * width + t * chunk
         return vec[start: start + chunk]
 
-    def _stream_xt(self, u, local=False, multi=False):
+    def _stream_xt(self, u, local=False, multi=False, hvp=False):
         """Pass A — ``z = X^T u`` over the permuted padded axis.
 
         features: streams the transposed chunk layouts and accumulates
         each chunk's ``(n_padded,)`` (or ``(n_padded, k)``) contribution;
         ``local=True`` keeps per-shard partial sums ``(m, n_padded)``
-        (the zero-communication s-step basis operator).
+        (the zero-communication s-step basis operator). ``hvp=True``
+        stages the tiles in ``cfg.hvp_dtype`` (the PCG loop's passes).
         """
         from repro.kernels import ops as kops
 
@@ -666,14 +729,15 @@ class DiscoSolver:
         if local:
             shape = (m,) + shape
         acc = jnp.zeros(shape, u.dtype)
-        for t, payload in enumerate(plan.stream("tr")):
+        for t, payload in enumerate(plan.stream("tr", hvp=hvp)):
             for s in range(m):
                 contrib = op(payload["dataT"][s], payload["colsT"][s],
                              self._slab(u, s, t))
                 acc = acc.at[s].add(contrib) if local else acc + contrib
         return acc
 
-    def _stream_x(self, z, coeffs=None, local=False, multi=False):
+    def _stream_x(self, z, coeffs=None, local=False, multi=False,
+                  hvp=False):
         """Pass B — ``y = X (c .* z)`` back onto the permuted padded axis.
 
         features: streams the forward chunk layouts; each chunk emits its
@@ -686,7 +750,7 @@ class DiscoSolver:
         plan, m = self._plan, self.m
         op = kops.ell_matmat if multi else kops.ell_matvec
         parts = [[None] * plan.n_steps for _ in range(m)]
-        for t, payload in enumerate(plan.stream("fwd")):
+        for t, payload in enumerate(plan.stream("fwd", hvp=hvp)):
             for s in range(m):
                 zin = z[s] if local else z
                 parts[s][t] = op(payload["data"][s], payload["cols"][s],
@@ -695,15 +759,33 @@ class DiscoSolver:
                                 for s in range(m)])
 
     def _stream_hvp_samples(self, u, coeffs, multi=False):
-        """DiSCO-S fused pass: each sample chunk completes both HVP
-        directions locally (``X_t (c_t .* (X_t^T u))``), so one pass over
-        the store serves the whole product."""
+        """DiSCO-S chunk-local pass: each sample chunk completes both HVP
+        directions (``X_t (c_t .* (X_t^T u))``), so one pass over the
+        store serves the whole product. With ``cfg.hvp_fused`` only the
+        *transposed* layout is streamed and each chunk runs the one-pass
+        fused kernel — half the staged tile bytes per HVP application
+        (docs/kernels.md); tiles are staged in ``cfg.hvp_dtype`` either
+        way. The fused-vs-two-pass choice is made HERE, from the plan's
+        global tile geometry, so an oversized chunk row degrades to the
+        two-pass kernel stream — never to the ops-level last-resort jnp
+        path — and the whole stream takes one consistent shape."""
         from repro.kernels import ops as kops
 
         plan, m = self._plan, self.m
-        op = kops.ell_matmat if multi else kops.ell_matvec
         acc = jnp.zeros(u.shape, u.dtype)
-        for t, payload in enumerate(plan.stream("both")):
+        itemsize = np.dtype(plan.hvp_dtype or plan.store.dtype).itemsize
+        fused = self.cfg.hvp_fused and kops.ell_fused_fits(
+            plan.w_tr, plan.block_cols, plan.block_rows, itemsize,
+            self.d_padded, s=(u.shape[1] if multi else 1))
+        if fused:
+            op = kops.ell_hvp_mm if multi else kops.ell_hvp
+            for t, payload in enumerate(plan.stream("tr", hvp=True)):
+                for s in range(m):
+                    acc = acc + op(payload["dataT"][s], payload["colsT"][s],
+                                   u, self._slab(coeffs, s, t))
+            return acc
+        op = kops.ell_matmat if multi else kops.ell_matvec
+        for t, payload in enumerate(plan.stream("both", hvp=True)):
             for s in range(m):
                 z = op(payload["dataT"][s], payload["colsT"][s], u)
                 acc = acc + op(payload["data"][s], payload["cols"][s], z,
@@ -786,18 +868,19 @@ class DiscoSolver:
                         "DiSCO-F")
 
                 def hvp(u):
-                    z = self._stream_xt(u)
-                    return self._stream_x(z, coeffs=c_eff) / n + lam * u
+                    z = self._stream_xt(u, hvp=True)
+                    return self._stream_x(z, coeffs=c_eff, hvp=True) / n \
+                        + lam * u
 
                 def hvp_multi(U):
-                    Z = self._stream_xt(U, multi=True)
-                    return self._stream_x(Z, coeffs=c_eff, multi=True) \
-                        / n + lam * U
+                    Z = self._stream_xt(U, multi=True, hvp=True)
+                    return self._stream_x(Z, coeffs=c_eff, multi=True,
+                                          hvp=True) / n + lam * U
 
                 def basis_op(u):
-                    z_loc = self._stream_xt(u, local=True)    # no reduce
-                    return self._stream_x(z_loc, coeffs=c_eff,
-                                          local=True) / n + lam * u
+                    z_loc = self._stream_xt(u, local=True, hvp=True)
+                    return self._stream_x(z_loc, coeffs=c_eff, local=True,
+                                          hvp=True) / n + lam * u
 
                 eps = cfg.pcg_rel_tol * gnorm
                 res = pcg_streamed(hvp, apply_precond, g, eps,

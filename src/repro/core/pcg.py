@@ -291,10 +291,12 @@ def _features_precond(precond, X_loc, tau_idx, coeffs_tau, lam, mu,
 def pcg_samples(X_loc, coeffs_loc, n_global, lam, g, eps, max_iter,
                 X_tau=None, coeffs_tau=None, mu=0.0, axis_name="data",
                 precond="woodbury", sag_epochs=5, use_kernel=False,
-                block_s=1, axis_size=None):
+                block_s=1, axis_size=None, hvp_fused=False):
     """Runs inside shard_map over ``axis_name``.
 
-    X_loc       : (d, n_loc) local sample columns
+    X_loc       : (d, n_loc) local sample columns — f32, or the bf16
+                  mixed-precision HVP copy (``DiscoConfig.hvp_dtype``;
+                  all state vectors stay f32 either way)
     coeffs_loc  : (n_loc,) phi'' at w_k (already masked/scaled if the
                   Hessian is subsampled, paper §5.4)
     g           : (d,) replicated gradient
@@ -306,35 +308,75 @@ def pcg_samples(X_loc, coeffs_loc, n_global, lam, g, eps, max_iter,
                   rounds). ``max_iter`` caps rounds in that mode.
     axis_size   : static size of ``axis_name`` (pass 1 on a single-shard
                   mesh so the s-step basis operator is the exact Hessian)
+    hvp_fused   : route every local HVP through the one-pass fused
+                  kernels (docs/kernels.md): the sample-partitioned local
+                  product X_loc (c .* X_loc^T u) completes both directions
+                  before the psum, so the fused kernel applies to every
+                  HVP here — X tiles stream from HBM once per application.
     """
-    n_global = jnp.asarray(n_global, X_loc.dtype)
+    n_global = jnp.asarray(n_global, g.dtype)
     sparse = isinstance(X_loc, EllPair)
 
+    # ONE definition of the local (multi-)HVP product per backend; every
+    # site below (classic hvp, s-step basis operator, s-step round)
+    # frames it with its own collective and scale. DiSCO-S products are
+    # local by construction (the psum comes after), so ``hvp_fused``
+    # swaps in the one-pass kernels everywhere here.
     if sparse:
-        # blocked-ELL two-pass HVP (kernels/sparse_hvp.py): pass A streams
-        # the transposed layout, pass B the forward layout with the
-        # coefficient scale fused; the cross-device reduction stays a psum
-        # here, outside the kernel. (``use_kernel`` is moot — the ELL ops
-        # dispatch native/interpret/ref via REPRO_KERNEL_MODE.)
+        # blocked-ELL HVP (kernels/sparse_hvp.py): two-pass streams the
+        # transposed then the forward layout; the fused one-pass kernel
+        # completes both directions from the transposed layout alone.
+        # (``use_kernel`` is moot — the ELL ops dispatch native/
+        # interpret/ref via REPRO_KERNEL_MODE.)
         from repro.kernels import ops as kops
 
-        def hvp(u):
-            z = kops.ell_matvec(X_loc.dataT, X_loc.colsT, u)
-            y = kops.ell_matvec(X_loc.data, X_loc.cols, z, coeffs_loc)
-            return lax.psum(y, axis_name) / n_global + lam * u
+        if hvp_fused:
+            def local_hvp(u):
+                return kops.ell_hvp(X_loc.dataT, X_loc.colsT, u,
+                                    coeffs_loc,
+                                    fwd=(X_loc.data, X_loc.cols))
+
+            def local_hvp_multi(U):
+                return kops.ell_hvp_mm(X_loc.dataT, X_loc.colsT, U,
+                                       coeffs_loc,
+                                       fwd=(X_loc.data, X_loc.cols))
+        else:
+            def local_hvp(u):
+                z = kops.ell_matvec(X_loc.dataT, X_loc.colsT, u)
+                return kops.ell_matvec(X_loc.data, X_loc.cols, z,
+                                       coeffs_loc)
+
+            def local_hvp_multi(U):
+                Z = kops.ell_matmat(X_loc.dataT, X_loc.colsT, U)
+                return kops.ell_matmat(X_loc.data, X_loc.cols, Z,
+                                       coeffs_loc)
     elif use_kernel:
-        # Pallas two-pass HVP (kernels/glm_hvp.py) on the local shard; the
-        # cross-device reduction stays a psum here, outside the kernel.
+        # Pallas HVP (kernels/glm_hvp.py) on the local shard.
         from repro.kernels import ops as kops
 
-        def hvp(u):
-            z = kops.xt_u(X_loc, u)
-            y = kops.x_cz_local(X_loc, coeffs_loc, z)
-            return lax.psum(y, axis_name) / n_global + lam * u
+        if hvp_fused:
+            def local_hvp(u):
+                return kops.x_c_xt_u(X_loc, coeffs_loc, u)
+
+            def local_hvp_multi(U):
+                return kops.x_c_xt_multi(X_loc, coeffs_loc, U)
+        else:
+            def local_hvp(u):
+                z = kops.xt_u(X_loc, u)
+                return kops.x_cz_local(X_loc, coeffs_loc, z)
+
+            def local_hvp_multi(U):
+                Z = kops.xt_multi(X_loc, U)
+                return kops.x_cz_multi(X_loc, coeffs_loc, Z)
     else:
-        def hvp(u):
-            local = X_loc @ (coeffs_loc * (X_loc.T @ u))
-            return lax.psum(local, axis_name) / n_global + lam * u
+        def local_hvp(u):
+            return X_loc @ (coeffs_loc * (X_loc.T @ u))
+
+        def local_hvp_multi(U):
+            return X_loc @ (coeffs_loc[:, None] * (X_loc.T @ U))
+
+    def hvp(u):
+        return lax.psum(local_hvp(u), axis_name) / n_global + lam * u
 
     apply_precond = _samples_precond(precond, X_tau, coeffs_tau, lam, mu,
                                      sag_epochs)
@@ -356,24 +398,8 @@ def pcg_samples(X_loc, coeffs_loc, n_global, lam, g, eps, max_iter,
     # Zero-communication basis operator: the replicated tau-sample Hessian
     # estimate (exact on a single shard, where X_loc covers all samples).
     if axis_size == 1:
-        if sparse:
-            from repro.kernels import ops as kops
-
-            def basis_op(u):
-                z = kops.ell_matvec(X_loc.dataT, X_loc.colsT, u)
-                return kops.ell_matvec(X_loc.data, X_loc.cols, z,
-                                       coeffs_loc) / n_global + lam * u
-        elif use_kernel:
-            from repro.kernels import ops as kops
-
-            def basis_op(u):
-                z = kops.xt_u(X_loc, u)
-                return kops.x_cz_local(X_loc, coeffs_loc, z) / n_global \
-                    + lam * u
-        else:
-            def basis_op(u):
-                return X_loc @ (coeffs_loc * (X_loc.T @ u)) / n_global \
-                    + lam * u
+        def basis_op(u):
+            return local_hvp(u) / n_global + lam * u
     else:
         if X_tau is None:
             raise ValueError("s-step pcg_samples on a multi-shard axis "
@@ -392,27 +418,9 @@ def pcg_samples(X_loc, coeffs_loc, n_global, lam, g, eps, max_iter,
 
     # MGS mixes the carried direction into all columns, so the whole basis
     # goes through the batched HVP (Hp is not reusable here).
-    if sparse:
-        from repro.kernels import ops as kops
-
-        def hvp_round(U, Hp):
-            del Hp
-            Z = kops.ell_matmat(X_loc.dataT, X_loc.colsT, U)
-            W_loc = kops.ell_matmat(X_loc.data, X_loc.cols, Z, coeffs_loc)
-            return lax.psum(W_loc, axis_name) / n_global + lam * U
-    elif use_kernel:
-        from repro.kernels import ops as kops
-
-        def hvp_round(U, Hp):
-            del Hp
-            Z = kops.xt_multi(X_loc, U)
-            W_loc = kops.x_cz_multi(X_loc, coeffs_loc, Z)
-            return lax.psum(W_loc, axis_name) / n_global + lam * U
-    else:
-        def hvp_round(U, Hp):
-            del Hp
-            W_loc = X_loc @ (coeffs_loc[:, None] * (X_loc.T @ U))
-            return lax.psum(W_loc, axis_name) / n_global + lam * U
+    def hvp_round(U, Hp):
+        del Hp
+        return lax.psum(local_hvp_multi(U), axis_name) / n_global + lam * U
 
     def gram(U, W, r):
         # replicated vectors: the whole Gram system is local, zero comm —
@@ -432,12 +440,14 @@ def pcg_samples(X_loc, coeffs_loc, n_global, lam, g, eps, max_iter,
 def pcg_features(X_loc, coeffs, n_global, lam, g_loc, eps, max_iter,
                  tau_idx=None, coeffs_tau=None, mu=0.0, axis_name="model",
                  precond="woodbury", use_kernel=False, block_s=1,
-                 X_tau_loc=None):
+                 X_tau_loc=None, axis_size=None, hvp_fused=False):
     """Runs inside shard_map over ``axis_name``.
 
     X_loc      : (d_j, n) local feature rows (all samples) — a dense array
                  or a blocked-ELL :class:`repro.data.sparse.EllPair`
-                 (then every vector below carries the ELL-padded lengths)
+                 (then every vector below carries the ELL-padded lengths);
+                 f32, or the bf16 mixed-precision HVP copy
+                 (``DiscoConfig.hvp_dtype`` — state vectors stay f32)
     coeffs     : (n,) phi'' at w_k — *replicated* (derived from the globally
                  reduced margins, which every shard already holds)
     g_loc      : (d_j,) local gradient shard
@@ -446,34 +456,101 @@ def pcg_features(X_loc, coeffs, n_global, lam, g_loc, eps, max_iter,
                  required for sparse ``X_loc`` (which cannot be column-
                  sliced in-kernel), optional for dense
     block_s    : >1 selects the s-step engine (see pcg_samples)
+    axis_size  : static size of ``axis_name``; with ``hvp_fused`` a size-1
+                 axis lets the classic HVP fuse too (the z psum is the
+                 identity there)
+    hvp_fused  : one-pass fused kernels (docs/kernels.md) wherever no
+                 collective separates the two HVP directions: always the
+                 zero-communication s-step basis operator; the true HVP
+                 only on a single-shard axis — the multi-shard DiSCO-F
+                 HVP *must* psum the n-vector between its passes, so it
+                 stays two-pass by construction.
     """
-    n_global = jnp.asarray(n_global, X_loc.dtype)
+    n_global = jnp.asarray(n_global, g_loc.dtype)
     sparse = isinstance(X_loc, EllPair)
+    fuse_full = hvp_fused and axis_size == 1   # psum(z) == z on 1 shard
 
+    # Per-backend pieces, each defined ONCE: the split passes (A then B —
+    # the psum between them IS DiSCO-F's communication, so the true
+    # multi-shard HVP can never fuse) and the collective-free local
+    # product (one-pass fused when requested), which serves the s-step
+    # basis operator at any shard count and the full HVP at m = 1.
     if sparse:
         from repro.kernels import ops as kops
 
-        def hvp(u_loc):
-            # ELL pass A produces the one communicated n-vector...
-            z = lax.psum(kops.ell_matvec(X_loc.dataT, X_loc.colsT, u_loc),
-                         axis_name)
-            # ...pass B fuses the coefficient scale into X @ (c*z)
-            return kops.ell_matvec(X_loc.data, X_loc.cols, z, coeffs) \
-                / n_global + lam * u_loc
+        def passA(u_loc):
+            return kops.ell_matvec(X_loc.dataT, X_loc.colsT, u_loc)
+
+        def passB(z):
+            return kops.ell_matvec(X_loc.data, X_loc.cols, z, coeffs)
+
+        def passA_multi(U):
+            return kops.ell_matmat(X_loc.dataT, X_loc.colsT, U)
+
+        def passB_multi(Z):
+            return kops.ell_matmat(X_loc.data, X_loc.cols, Z, coeffs)
+
+        if hvp_fused:
+            def local_hvp(u_loc):
+                return kops.ell_hvp(X_loc.dataT, X_loc.colsT, u_loc,
+                                    coeffs, fwd=(X_loc.data, X_loc.cols))
+
+            def local_hvp_multi(U):
+                return kops.ell_hvp_mm(X_loc.dataT, X_loc.colsT, U,
+                                       coeffs,
+                                       fwd=(X_loc.data, X_loc.cols))
+        else:
+            local_hvp = lambda u_loc: passB(passA(u_loc))
+            local_hvp_multi = lambda U: passB_multi(passA_multi(U))
     elif use_kernel:
         from repro.kernels import ops as kops
 
+        def passA(u_loc):
+            return kops.xt_u(X_loc, u_loc)
+
+        def passB(z):
+            return kops.x_cz_local(X_loc, coeffs, z)
+
+        def passA_multi(U):
+            return kops.xt_multi(X_loc, U)
+
+        def passB_multi(Z):
+            return kops.x_cz_multi(X_loc, coeffs, Z)
+
+        if hvp_fused:
+            def local_hvp(u_loc):
+                return kops.x_c_xt_u(X_loc, coeffs, u_loc)
+
+            def local_hvp_multi(U):
+                return kops.x_c_xt_multi(X_loc, coeffs, U)
+        else:
+            local_hvp = lambda u_loc: passB(passA(u_loc))
+            local_hvp_multi = lambda U: passB_multi(passA_multi(U))
+    else:
+        def passA(u_loc):
+            return X_loc.T @ u_loc
+
+        def passB(z):
+            return X_loc @ (coeffs * z)
+
+        def passA_multi(U):
+            return X_loc.T @ U
+
+        def passB_multi(Z):
+            return X_loc @ (coeffs[:, None] * Z)
+
+        local_hvp = lambda u_loc: passB(passA(u_loc))
+        local_hvp_multi = lambda U: passB_multi(passA_multi(U))
+
+    if fuse_full:
         def hvp(u_loc):
-            # kernel pass A produces the one communicated n-vector...
-            z = lax.psum(kops.xt_u(X_loc, u_loc), axis_name)
-            # ...pass B fuses the coefficient scale into X @ (c*z)
-            return kops.x_cz_local(X_loc, coeffs, z) / n_global \
-                + lam * u_loc
+            return local_hvp(u_loc) / n_global + lam * u_loc
     else:
         def hvp(u_loc):
-            # THE communication of DiSCO-F: one reduceAll of an R^n vector.
-            z = lax.psum(X_loc.T @ u_loc, axis_name)          # (n,)
-            return X_loc @ (coeffs * z) / n_global + lam * u_loc
+            # THE communication of DiSCO-F: one reduceAll of an R^n
+            # vector between pass A and pass B.
+            z = lax.psum(passA(u_loc), axis_name)             # (n,)
+            return passB(z) / n_global + lam * u_loc
 
     apply_precond = _features_precond(precond, X_loc, tau_idx, coeffs_tau,
                                       lam, mu, X_tau_loc=X_tau_loc)
@@ -489,24 +566,11 @@ def pcg_features(X_loc, coeffs, n_global, lam, g_loc, eps, max_iter,
 
     # Zero-communication basis operator: the block-diagonal local Hessian
     # X_j diag(c) X_j^T / n + lam I (exact on a single shard, where the
-    # local rows are all rows).
-    if sparse:
-        from repro.kernels import ops as kops
-
-        def basis_op(u_loc):
-            z = kops.ell_matvec(X_loc.dataT, X_loc.colsT, u_loc)  # no psum
-            return kops.ell_matvec(X_loc.data, X_loc.cols, z, coeffs) \
-                / n_global + lam * u_loc
-    elif use_kernel:
-        from repro.kernels import ops as kops
-
-        def basis_op(u_loc):
-            z = kops.xt_u(X_loc, u_loc)      # deliberately NOT psum'd
-            return kops.x_cz_local(X_loc, coeffs, z) / n_global + lam * u_loc
-    else:
-        def basis_op(u_loc):
-            return X_loc @ (coeffs * (X_loc.T @ u_loc)) / n_global \
-                + lam * u_loc
+    # local rows are all rows). No collective separates its two passes —
+    # deliberately NOT psum'd — so the fused one-pass kernel applies at
+    # ANY shard count.
+    def basis_op(u_loc):
+        return local_hvp(u_loc) / n_global + lam * u_loc
 
     def build_basis(r_loc, p_loc, scales):
         # Sharded vectors: exact norms would cost a psum per basis step, so
@@ -522,29 +586,16 @@ def pcg_features(X_loc, coeffs, n_global, lam, g_loc, eps, max_iter,
     # in hand from last round's W a (carried as Hp in the loop state) — so
     # only the s Krylov columns ride the batched HVP and the communicated
     # payload is (n, s), not (n, s+1).
-    if sparse:
-        from repro.kernels import ops as kops
-
+    if fuse_full:
         def hvp_round(U, Hp):
             Uk = U[:, :s]
-            Z = lax.psum(kops.ell_matmat(X_loc.dataT, X_loc.colsT, Uk),
-                         axis_name)                            # (n, s)
-            Wk = kops.ell_matmat(X_loc.data, X_loc.cols, Z, coeffs) \
-                / n_global + lam * Uk
-            return jnp.concatenate([Wk, Hp[:, None]], axis=1)
-    elif use_kernel:
-        from repro.kernels import ops as kops
-
-        def hvp_round(U, Hp):
-            Uk = U[:, :s]
-            Z = lax.psum(kops.xt_multi(X_loc, Uk), axis_name)  # (n, s)
-            Wk = kops.x_cz_multi(X_loc, coeffs, Z) / n_global + lam * Uk
+            Wk = local_hvp_multi(Uk) / n_global + lam * Uk
             return jnp.concatenate([Wk, Hp[:, None]], axis=1)
     else:
         def hvp_round(U, Hp):
             Uk = U[:, :s]
-            Z = lax.psum(X_loc.T @ Uk, axis_name)              # (n, s)
-            Wk = X_loc @ (coeffs[:, None] * Z) / n_global + lam * Uk
+            Z = lax.psum(passA_multi(Uk), axis_name)           # (n, s)
+            Wk = passB_multi(Z) / n_global + lam * Uk
             return jnp.concatenate([Wk, Hp[:, None]], axis=1)
 
     def gram(U, W, r_loc):

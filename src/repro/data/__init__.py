@@ -2,9 +2,9 @@ from repro.data.synthetic import make_glm_data, REGIMES
 from repro.data.libsvm import load_libsvm, save_libsvm
 from repro.data.sparse import (CSRMatrix, BlockedEll, EllPair,
                                ell_from_csr, ell_tile_widths,
-                               iter_libsvm_chunks, load_libsvm_sparse,
-                               make_sparse_glm_data, pad_csr_rows,
-                               truncate_features)
+                               hvp_tile_dtype, iter_libsvm_chunks,
+                               load_libsvm_sparse, make_sparse_glm_data,
+                               pad_csr_rows, truncate_features)
 from repro.data.partition import (Partition, chunk_partition,
                                   equal_width_partition, imbalance,
                                   lpt_partition, make_partition)
@@ -15,8 +15,9 @@ from repro.data.tokens import TokenPipeline, synthetic_token_stream
 
 __all__ = ["make_glm_data", "REGIMES", "load_libsvm", "save_libsvm",
            "CSRMatrix", "BlockedEll", "EllPair", "ell_from_csr",
-           "ell_tile_widths", "iter_libsvm_chunks", "load_libsvm_sparse",
-           "make_sparse_glm_data", "pad_csr_rows", "truncate_features",
+           "ell_tile_widths", "hvp_tile_dtype", "iter_libsvm_chunks",
+           "load_libsvm_sparse", "make_sparse_glm_data", "pad_csr_rows",
+           "truncate_features",
            "Partition", "chunk_partition", "equal_width_partition",
            "imbalance", "lpt_partition", "make_partition",
            "ChunkInfo", "ShardStore",

@@ -312,6 +312,29 @@ def pad_csr_rows(csr: CSRMatrix, n_rows: int) -> CSRMatrix:
                      shape=(n_rows, csr.shape[1]))
 
 
+def hvp_tile_dtype(name: str) -> np.dtype:
+    """Resolve ``DiscoConfig.hvp_dtype`` to a numpy-compatible dtype.
+
+    'float32' -> np.float32; 'bfloat16' -> the ml_dtypes bfloat16 (the
+    numpy-registered dtype jax itself uses), so bf16 tile arrays can be
+    built host-side in :func:`build_shard_ell_pairs` / the streaming
+    planner and ``device_put`` at half the f32 byte volume. The mixed-
+    precision contract (docs/kernels.md): only the *stored/streamed HVP
+    tiles* carry this dtype — PCG state, coefficients, gradients and
+    margins stay f32 at rest, and every kernel accumulates and returns
+    f32. (Inside a kernel the probe-vector MXU operand is cast to the
+    tile dtype for the dot itself, so bf16 rounds both dot operands;
+    the f32 accumulator and outputs never round.)
+    """
+    if name in ("float32", "f32"):
+        return np.dtype(np.float32)
+    if name in ("bfloat16", "bf16"):
+        import ml_dtypes  # jax dependency; numpy-registered bfloat16
+        return np.dtype(ml_dtypes.bfloat16)
+    raise ValueError(f"unknown hvp_dtype {name!r} "
+                     "(expected 'float32' or 'bfloat16')")
+
+
 class EllPair(NamedTuple):
     """Device-side sparse shard operand (a jax pytree of four arrays).
 
@@ -392,12 +415,15 @@ def shard_csrs_from_partition(X: CSRMatrix, part, axis: str
 
 
 def build_shard_ell_pairs(shard_csrs: list[CSRMatrix], block_rows: int,
-                          block_cols: int
+                          block_cols: int, dtype=None
                           ) -> tuple[np.ndarray, np.ndarray,
                                      np.ndarray, np.ndarray]:
     """Per-shard forward + transposed ELLs, stacked for ``shard_map``.
 
     shard_csrs : each shard's local matrix, all with identical shape
+    dtype      : optional tile-value dtype override — pass
+                 ``hvp_tile_dtype('bfloat16')`` to build the half-width
+                 mixed-precision HVP tile layouts (``cols`` stay int32)
     returns (data, cols, dataT, colsT) with leading shard axis ``m``;
     ``DiscoSolver`` device_puts these with ``P(axis, None, ...)``.
     """
@@ -406,6 +432,9 @@ def build_shard_ell_pairs(shard_csrs: list[CSRMatrix], block_rows: int,
           for c in shard_csrs]
     data, cols = stack_shard_ells(fwd)
     dataT, colsT = stack_shard_ells(tr)
+    if dtype is not None:
+        data = data.astype(dtype)
+        dataT = dataT.astype(dtype)
     return data, cols, dataT, colsT
 
 

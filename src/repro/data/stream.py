@@ -196,6 +196,7 @@ class StreamPlan:
     w_tr: int
     prefetch_depth: int = 2
     device_put: Callable | None = None    # dict[str, np.ndarray] -> dict
+    hvp_dtype: np.dtype | None = None     # HVP tile staging dtype (bf16)
     stats: PrefetchStats = dataclasses.field(default_factory=PrefetchStats)
 
     @property
@@ -250,28 +251,40 @@ class StreamPlan:
             out["dataT"], out["colsT"] = e.data, e.cols
         return out
 
-    def _load_step(self, t: int, kind: str) -> tuple[dict, int]:
+    def _load_step(self, t: int, kind: str, hvp: bool = False
+                   ) -> tuple[dict, int]:
         per_shard = [self._chunk_ells(int(self.schedule[s, t]), kind)
                      for s in range(self.m)]
         stacked = {k: np.stack([p[k] for p in per_shard])
                    for k in per_shard[0]}
+        if hvp and self.hvp_dtype is not None:
+            # mixed-precision HVP staging (docs/kernels.md): tile values
+            # cast host-side BEFORE device_put, so the staged (and
+            # ledger-counted) bytes halve at bf16; cols stay int32
+            for k in ("data", "dataT"):
+                if k in stacked and stacked[k].dtype != self.hvp_dtype:
+                    stacked[k] = stacked[k].astype(self.hvp_dtype)
         nbytes = sum(a.nbytes for a in stacked.values())
         if self.device_put is not None:
             stacked = self.device_put(stacked)
         return stacked, nbytes
 
-    def stream(self, kind: str = "both") -> Iterator[dict]:
+    def stream(self, kind: str = "both", hvp: bool = False
+               ) -> Iterator[dict]:
         """Iterate the schedule's steps through the prefetch pipeline.
 
         ``kind`` selects the layouts streamed: ``'fwd'`` (keys
         ``data``/``cols`` — drives ``X v``), ``'tr'`` (``dataT``/
         ``colsT`` — drives ``X^T u``), or ``'both'``. Each yielded dict
-        holds ``(m, ...)``-stacked arrays for one step.
+        holds ``(m, ...)``-stacked arrays for one step. ``hvp=True``
+        marks a Hessian-vector-product pass: tile values are staged in
+        ``hvp_dtype`` when one is set (the mixed-precision data plane —
+        margins/gradient passes stay at the store dtype).
         """
         if kind not in ("fwd", "tr", "both"):
             raise ValueError(f"unknown stream kind {kind!r}")
         return iter(ChunkPrefetcher(
-            lambda t: self._load_step(t, kind), self.n_steps,
+            lambda t: self._load_step(t, kind, hvp), self.n_steps,
             depth=self.prefetch_depth, stats=self.stats))
 
 
@@ -314,7 +327,8 @@ def _global_ell_widths(store: ShardStore, br: int, bc: int
 def plan_streams(store: ShardStore, m: int, strategy: str = "lpt",
                  block_rows: int = 128, block_cols: int = 128,
                  prefetch_depth: int = 2,
-                 device_put: Callable | None = None) -> StreamPlan:
+                 device_put: Callable | None = None,
+                 hvp_dtype: np.dtype | None = None) -> StreamPlan:
     """Plan a balanced streaming solve over ``store`` for ``m`` shards.
 
     Reads only the store *header* plus each chunk's index structure (to
@@ -328,6 +342,11 @@ def plan_streams(store: ShardStore, m: int, strategy: str = "lpt",
     ``chunk_size`` must be a multiple of the chunked axis' tile edge
     (``block_rows`` for a features store, ``block_cols`` for samples) so
     chunk boundaries never split a tile.
+
+    ``hvp_dtype`` (e.g. ``repro.data.sparse.hvp_tile_dtype('bfloat16')``)
+    stages the tile values of HVP passes (``stream(..., hvp=True)``) in
+    that dtype — half the host→device bytes per PCG pass at bf16; a
+    matching-dtype value (or None) is a no-op.
     """
     edge = block_rows if store.axis == "features" else block_cols
     if store.chunk_size % edge != 0:
@@ -346,9 +365,11 @@ def plan_streams(store: ShardStore, m: int, strategy: str = "lpt",
     br, bc = block_rows, block_cols
     w_fwd, w_tr = _global_ell_widths(store, br, bc)
 
+    if hvp_dtype is not None and np.dtype(hvp_dtype) == store.dtype:
+        hvp_dtype = None
     return StreamPlan(store=store, partition=part, schedule=schedule,
                       m=m, chunk_size=store.chunk_size,
                       block_rows=br, block_cols=bc,
                       w_fwd=w_fwd, w_tr=w_tr,
                       prefetch_depth=prefetch_depth,
-                      device_put=device_put)
+                      device_put=device_put, hvp_dtype=hvp_dtype)

@@ -103,7 +103,7 @@ class RequestPacker:
 
     def __init__(self, d: int, batch: int, block_b: int = 8,
                  block_d: int = 128, width: int | None = None,
-                 dtype=np.float32):
+                 dtype=np.float32, tile_dtype=None):
         if d <= 0 or batch <= 0:
             raise ValueError(f"need d > 0 and batch > 0, got d={d}, "
                              f"batch={batch}")
@@ -112,6 +112,12 @@ class RequestPacker:
         self.block_b = block_b
         self.block_d = block_d
         self.dtype = np.dtype(dtype)
+        # tile_dtype: storage dtype of the packed ELL tiles (the bytes
+        # each scoring dispatch stages) — e.g. bfloat16 for half-width
+        # ticks; request values and weights stay ``dtype``, the kernel
+        # accumulates f32 (docs/kernels.md mixed-precision contract)
+        self.tile_dtype = self.dtype if tile_dtype is None \
+            else np.dtype(tile_dtype)
         self.n_row_blocks = -(-batch // block_b)
         self.n_col_blocks = max(-(-d // block_d), 1)
         self.batch_padded = self.n_row_blocks * block_b
@@ -170,7 +176,9 @@ class RequestPacker:
                                  dtype=self.dtype)
         ell = ell_from_csr(csr, self.block_b, self.block_d,
                            width=self.width)
-        return ell.data, ell.cols
+        data = ell.data if ell.data.dtype == self.tile_dtype \
+            else ell.data.astype(self.tile_dtype)
+        return data, ell.cols
 
     def pad_weights(self, w: np.ndarray) -> np.ndarray:
         """Zero-pad ``(d,)`` weights to the packed ``(d_padded,)``."""
@@ -193,11 +201,17 @@ class ScoringEngine:
         batch: requests per scoring tick (the micro-batch width).
         block_b / block_d / width: packer tile geometry
             (:class:`RequestPacker`).
+        hvp_dtype: tile storage dtype of the packed request batches,
+            'float32' (default) or 'bfloat16' — the serving face of the
+            solver's ``DiscoConfig.hvp_dtype``: the scoring dispatch
+            stages half the tile bytes at bf16 while margins come back
+            f32-accumulated (the kernels' out_dtype contract).
     """
 
     def __init__(self, model, loss: str | None = None, *,
                  batch: int = 64, block_b: int = 8, block_d: int = 128,
-                 width: int | None = None):
+                 width: int | None = None, hvp_dtype: str = "float32"):
+        from repro.data.sparse import hvp_tile_dtype
         from repro.glm_serve.registry import ModelRegistry
 
         self.registry = model if isinstance(model, ModelRegistry) else None
@@ -216,9 +230,11 @@ class ScoringEngine:
         w = np.asarray(w)
         dtype = w.dtype if np.issubdtype(w.dtype, np.floating) \
             else np.float32
+        self.hvp_dtype = hvp_dtype
+        tile_dtype = hvp_tile_dtype(hvp_dtype)
         self.packer = RequestPacker(len(w), batch, block_b=block_b,
                                     block_d=block_d, width=width,
-                                    dtype=dtype)
+                                    dtype=dtype, tile_dtype=tile_dtype)
         self.w = w
         self._w_dev = jnp.asarray(self.packer.pad_weights(self.w))
         self._step = jax.jit(kops.ell_matvec)
@@ -247,7 +263,8 @@ class ScoringEngine:
             self.packer = RequestPacker(
                 len(pub.w), self.packer.batch,
                 block_b=self.packer.block_b,
-                block_d=self.packer.block_d, dtype=self.packer.dtype)
+                block_d=self.packer.block_d, dtype=self.packer.dtype,
+                tile_dtype=self.packer.tile_dtype)
         self.w = np.asarray(pub.w)
         self._w_dev = jnp.asarray(self.packer.pad_weights(self.w))
         self.version = v

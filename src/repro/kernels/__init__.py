@@ -2,16 +2,25 @@
 
   glm_hvp         GLM Hessian-vector product (the DiSCO PCG inner loop)
   glm_hvp_multi   batched HVP over s probe vectors (the s-step PCG round)
+  x_c_xt_u        fused ONE-PASS dense HVP core (panel-resident X read)
+  x_c_xt_multi    fused one-pass multi-vector dense HVP core
   ell_matvec      blocked-ELL sparse matvec (both sparse HVP passes)
   ell_matmat      blocked-ELL multi-vector pass (sparse s-step rounds)
+  ell_hvp         fused ONE-PASS blocked-ELL HVP (transposed layout only)
+  ell_hvp_mm      fused one-pass blocked-ELL multi-vector HVP
   flash_attention online-softmax attention (prefill path of the model zoo)
 
 Each kernel ships with a jnp oracle (``ref.py``) and a jit'd wrapper
-(``ops.py``) that dispatches native/interpret/ref by backend.
+(``ops.py``) that dispatches native/interpret/ref by backend. All HVP
+kernels accumulate in f32 and return ``out_dtype`` (default f32), so
+bf16 tile storage (``DiscoConfig.hvp_dtype``) halves HBM bytes without
+rounding intermediates — see docs/kernels.md.
 """
-from repro.kernels.ops import (ell_matmat, ell_matvec, flash_attention,
-                               glm_hvp, glm_hvp_multi, x_cz_multi, xt_multi,
+from repro.kernels.ops import (ell_hvp, ell_hvp_mm, ell_matmat, ell_matvec,
+                               flash_attention, glm_hvp, glm_hvp_multi,
+                               x_c_xt_multi, x_c_xt_u, x_cz_multi, xt_multi,
                                xt_u)
 
 __all__ = ["glm_hvp", "glm_hvp_multi", "xt_u", "xt_multi", "x_cz_multi",
-           "ell_matvec", "ell_matmat", "flash_attention"]
+           "x_c_xt_u", "x_c_xt_multi", "ell_matvec", "ell_matmat",
+           "ell_hvp", "ell_hvp_mm", "flash_attention"]

@@ -34,6 +34,23 @@ across all s probe vectors — arithmetic intensity rises from matvec
 single fused all-reduce of the s-step round. ``s`` is padded to a
 lane-friendly multiple (128) by the ops.py wrappers so the (bd, s)/(bn, s)
 vector tiles stay VREG/MXU aligned.
+
+One-pass fused variants (``x_c_xt_u`` / ``x_c_xt_multi``, docs/kernels.md):
+
+When no collective separates the two passes (DiSCO-S local products,
+single-shard DiSCO-F, the s-step zero-communication basis operators) the
+whole product  y = X (c .* (X^T u))  runs from **panel-resident** tiles:
+the grid walks column panels X[:, j] of shape (d, bn); each program
+computes the local z_j = X[:, j]^T u, applies the phi'' scale, and
+immediately accumulates y += X[:, j] (c_j .* z_j) from the *same* VMEM
+panel — X streams from HBM ONCE per HVP instead of twice, halving the
+traffic of this memory-bound kernel. Residency requires the full-height
+panel (d * bn * itemsize) to fit the VMEM budget; the ops.py wrapper
+falls back to the two-pass kernels when it does not.
+
+All kernels accumulate in f32 and return f32 (``out_dtype``) regardless
+of the tile dtype, so bf16 tile storage (DiscoConfig.hvp_dtype) halves
+bytes moved without compounding rounding error across PCG iterations.
 """
 from __future__ import annotations
 
@@ -61,8 +78,14 @@ def _xt_u_kernel(x_ref, u_ref, z_ref):
     z_ref[...] += jnp.dot(u, x, preferred_element_type=jnp.float32)
 
 
-def xt_u(X, u, *, block_d=512, block_n=512, interpret=False):
-    """z = X^T u.   X: (d, n), u: (d,) -> z: (n,).  Shapes pre-padded."""
+def xt_u(X, u, *, block_d=512, block_n=512, interpret=False,
+         out_dtype=jnp.float32):
+    """z = X^T u.   X: (d, n), u: (d,) -> z: (n,).  Shapes pre-padded.
+
+    Accumulates in f32 and returns ``out_dtype`` (default f32) — casting
+    to ``X.dtype`` would silently round the accumulator under bf16 tile
+    storage.
+    """
     d, n = X.shape
     assert d % block_d == 0 and n % block_n == 0, (X.shape, block_d, block_n)
     grid = (n // block_n, d // block_d)
@@ -76,8 +99,8 @@ def xt_u(X, u, *, block_d=512, block_n=512, interpret=False):
         out_specs=pl.BlockSpec((1, block_n), lambda nj, di: (0, nj)),
         out_shape=jax.ShapeDtypeStruct((1, n), jnp.float32),
         interpret=interpret,
-    )(X, u.reshape(1, d))
-    return out.reshape(n).astype(X.dtype)
+    )(X, u.astype(X.dtype).reshape(1, d))
+    return out.reshape(n).astype(out_dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -98,8 +121,9 @@ def _x_cz_kernel(x_ref, c_ref, z_ref, y_ref):
                           preferred_element_type=jnp.float32)
 
 
-def x_cz(X, c, z, *, block_d=512, block_n=512, interpret=False):
-    """y = X @ (c * z).   X: (d, n), c/z: (n,) -> y: (d,)."""
+def x_cz(X, c, z, *, block_d=512, block_n=512, interpret=False,
+         out_dtype=jnp.float32):
+    """y = X @ (c * z).   X: (d, n), c/z: (n,) -> y: (d,) in ``out_dtype``."""
     d, n = X.shape
     assert d % block_d == 0 and n % block_n == 0, (X.shape, block_d, block_n)
     grid = (d // block_d, n // block_n)
@@ -115,7 +139,7 @@ def x_cz(X, c, z, *, block_d=512, block_n=512, interpret=False):
         out_shape=jax.ShapeDtypeStruct((d, 1), jnp.float32),
         interpret=interpret,
     )(X, c.reshape(1, n), z.reshape(1, n))
-    return out.reshape(d).astype(X.dtype)
+    return out.reshape(d).astype(out_dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -141,9 +165,10 @@ def _xt_multi_kernel(x_ref, u_ref, z_ref):
         preferred_element_type=jnp.float32)
 
 
-def xt_multi(X, U, *, block_d=512, block_n=512, interpret=False):
-    """Z = X^T U.   X: (d, n), U: (d, s) -> Z: (n, s).  Shapes pre-padded
-    (d, n to block multiples; s to a lane multiple)."""
+def xt_multi(X, U, *, block_d=512, block_n=512, interpret=False,
+             out_dtype=jnp.float32):
+    """Z = X^T U.   X: (d, n), U: (d, s) -> Z: (n, s) in ``out_dtype``.
+    Shapes pre-padded (d, n to block multiples; s to a lane multiple)."""
     d, n = X.shape
     s = U.shape[1]
     assert U.shape[0] == d, (X.shape, U.shape)
@@ -159,8 +184,8 @@ def xt_multi(X, U, *, block_d=512, block_n=512, interpret=False):
         out_specs=pl.BlockSpec((block_n, s), lambda nj, di: (nj, 0)),
         out_shape=jax.ShapeDtypeStruct((n, s), jnp.float32),
         interpret=interpret,
-    )(X, U)
-    return out.astype(X.dtype)
+    )(X, U.astype(X.dtype))
+    return out.astype(out_dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -180,8 +205,10 @@ def _x_cz_multi_kernel(x_ref, c_ref, z_ref, y_ref):
     y_ref[...] += jnp.dot(x, cz, preferred_element_type=jnp.float32)
 
 
-def x_cz_multi(X, c, Z, *, block_d=512, block_n=512, interpret=False):
-    """Y = X @ (c[:, None] * Z).   X: (d, n), c: (n,), Z: (n, s) -> (d, s).
+def x_cz_multi(X, c, Z, *, block_d=512, block_n=512, interpret=False,
+               out_dtype=jnp.float32):
+    """Y = X @ (c[:, None] * Z).   X: (d, n), c: (n,), Z: (n, s) ->
+    (d, s) in ``out_dtype``.
 
     c rides along as an (n, 1) column so the scale broadcasts against the
     (bn, s) Z tile inside the kernel — one multiply fused into pass B, same
@@ -203,4 +230,98 @@ def x_cz_multi(X, c, Z, *, block_d=512, block_n=512, interpret=False):
         out_shape=jax.ShapeDtypeStruct((d, s), jnp.float32),
         interpret=interpret,
     )(X, c.reshape(n, 1), Z)
-    return out.astype(X.dtype)
+    return out.astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# fused one-pass:  y = X (c .* (X^T u))     (panel-resident, single X read)
+# ---------------------------------------------------------------------------
+
+def _x_c_xt_u_kernel(x_ref, c_ref, u_ref, y_ref):
+    """Grid (nj,): the full-height column panel X[:, j] (d, bn) is VMEM-
+    resident; both HVP directions run from it before the next panel
+    streams in: z = u @ X_j, then y(1, d) += (c_j * z) @ X_j^T."""
+    nj = pl.program_id(0)
+
+    @pl.when(nj == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    x = x_ref[...]                                       # (d, bn)
+    z = jnp.dot(u_ref[...], x, preferred_element_type=jnp.float32)
+    cz = (c_ref[...] * z).astype(x.dtype)                # fused phi'' scale
+    y_ref[...] += jax.lax.dot_general(
+        cz, x, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def x_c_xt_u(X, c, u, *, block_n=512, interpret=False,
+             out_dtype=jnp.float32):
+    """y = X (c .* (X^T u)) in ONE streaming pass over X.
+
+    X: (d, n) with d a multiple of 128 (lane width of the (1, d) probe
+    tiles) and n a multiple of ``block_n``; c/u pre-padded to match.
+    The caller must ensure the (d, block_n) panel fits VMEM — the ops.py
+    wrapper enforces the budget and falls back to the two-pass kernels.
+    Accumulates f32, returns ``out_dtype``.
+    """
+    d, n = X.shape
+    assert d % 128 == 0 and n % block_n == 0, (X.shape, block_n)
+    out = pl.pallas_call(
+        _x_c_xt_u_kernel,
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((d, block_n), lambda nj: (0, nj)),
+            pl.BlockSpec((1, block_n), lambda nj: (0, nj)),
+            pl.BlockSpec((1, d), lambda nj: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda nj: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, d), jnp.float32),
+        interpret=interpret,
+    )(X, c.reshape(1, n), u.astype(X.dtype).reshape(1, d))
+    return out.reshape(d).astype(out_dtype)
+
+
+def _x_c_xt_multi_kernel(x_ref, c_ref, u_ref, y_ref):
+    """Grid (nj,): multi-vector twin — Z = X_j^T U from the resident
+    panel, then Y(d, s) += X_j (c_j .* Z) from the same tiles."""
+    nj = pl.program_id(0)
+
+    @pl.when(nj == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    x = x_ref[...]                                       # (d, bn)
+    z = jax.lax.dot_general(
+        x, u_ref[...], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)              # (bn, s)
+    cz = (c_ref[...] * z).astype(x.dtype)                # c: (bn, 1)
+    y_ref[...] += jnp.dot(x, cz, preferred_element_type=jnp.float32)
+
+
+def x_c_xt_multi(X, c, U, *, block_n=512, interpret=False,
+                 out_dtype=jnp.float32):
+    """Y = X (c .* (X^T U)) in ONE streaming pass over X (s vectors).
+
+    Same panel-residency contract as :func:`x_c_xt_u`; U: (d, s) with s
+    padded to a lane multiple by the ops.py wrapper. One panel read
+    serves all s probe vectors of both passes — the s-step round's
+    batched HVP at half its two-pass HBM traffic.
+    """
+    d, n = X.shape
+    s = U.shape[1]
+    assert U.shape[0] == d and c.shape == (n,), (X.shape, c.shape, U.shape)
+    assert d % 128 == 0 and n % block_n == 0, (X.shape, block_n)
+    out = pl.pallas_call(
+        _x_c_xt_multi_kernel,
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((d, block_n), lambda nj: (0, nj)),
+            pl.BlockSpec((block_n, 1), lambda nj: (nj, 0)),
+            pl.BlockSpec((d, s), lambda nj: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((d, s), lambda nj: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((d, s), jnp.float32),
+        interpret=interpret,
+    )(X, c.reshape(n, 1), U.astype(X.dtype))
+    return out.astype(out_dtype)

@@ -32,13 +32,57 @@ def _mode() -> str:
     return m
 
 
+# VMEM budget for the fused one-pass kernels (docs/kernels.md): the dense
+# panel (d, block_n) — or the sparse tile row plus the resident u/y
+# vectors — must fit alongside double buffering; past the budget the
+# wrappers fall back to the two-pass kernels, which is always legal.
+_FUSED_VMEM_BYTES = int(os.environ.get("REPRO_FUSED_VMEM_BYTES", 4 << 20))
+
+
+def _fused_panel_fits(d_padded: int, block_n: int, itemsize: int,
+                      s_pad: int = 1) -> bool:
+    # panel + the resident f32 u/y blocks (s_pad = LANE-padded probe
+    # count for the multi-vector kernel — what is actually held in VMEM)
+    panel = d_padded * block_n * itemsize
+    vectors = 2 * d_padded * s_pad * 4
+    return panel + vectors <= _FUSED_VMEM_BYTES
+
+
+def ell_fused_fits(wt: int, bc: int, br: int, itemsize: int, u_len: int,
+                   s: int = 1) -> bool:
+    """Whether a fused one-pass ELL HVP's working set — one transposed
+    tile row of ``wt`` (bc, br) tiles plus the resident u and y vectors
+    over ``s`` probe columns — fits the fused VMEM budget.
+
+    ``s`` is LANE-padded internally (the multi-vector kernel holds the
+    *padded* (nrb, br, s) blocks resident). Callers that choose a
+    *streaming plan* (disco's fused DiSCO-S chunk HVP) should check
+    this up front with the plan's global tile geometry and fall back to
+    the two-pass layout stream when it fails, rather than hitting the
+    per-call last-resort fallback below.
+    """
+    s_pad = 1 if s <= 1 else -(-s // LANE) * LANE
+    tile_row = wt * bc * br * itemsize
+    vectors = 2 * u_len * 4 * s_pad         # u + y accumulator, f32
+    return tile_row + vectors <= _FUSED_VMEM_BYTES
+
+
+def _fused_ell_fits(dataT, u_len: int, s: int = 1) -> bool:
+    _, wt, bc, br = dataT.shape
+    return ell_fused_fits(wt, bc, br, dataT.dtype.itemsize, u_len, s)
+
+
 # ---------------------------------------------------------------------------
 # GLM HVP
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("block_d", "block_n", "mode"))
-def _glm_hvp_impl(X, c, u, lam, *, block_d, block_n, mode):
+@functools.partial(jax.jit, static_argnames=("block_d", "block_n", "mode",
+                                             "fused"))
+def _glm_hvp_impl(X, c, u, lam, *, block_d, block_n, mode, fused):
     d, n = X.shape
+    if fused:
+        y = x_c_xt_u(X, c, u, block_d=block_d, block_n=block_n, mode=mode)
+        return y / n + lam * u
     if mode == "ref":
         return _ref.ref_glm_hvp(X, c, u, lam)
     interp = mode == "interpret"
@@ -53,11 +97,16 @@ def _glm_hvp_impl(X, c, u, lam, *, block_d, block_n, mode):
     return y[:d] / n + lam * u
 
 
-def glm_hvp(X, c, u, lam, *, block_d=512, block_n=512, mode=None):
-    """H u = X diag(c) X^T u / n + lam u  via the two fused Pallas passes."""
+def glm_hvp(X, c, u, lam, *, block_d=512, block_n=512, mode=None,
+            fused=False):
+    """H u = X diag(c) X^T u / n + lam u  via the Pallas HVP kernels.
+
+    ``fused=True`` routes through the one-pass panel-resident kernel
+    (:func:`x_c_xt_u`) — X streams from HBM once instead of twice."""
     mode = mode or _mode()
-    return _glm_hvp_impl(X, c, u, jnp.asarray(lam, X.dtype),
-                         block_d=block_d, block_n=block_n, mode=mode)
+    return _glm_hvp_impl(X, c, u, jnp.asarray(lam, jnp.float32),
+                         block_d=block_d, block_n=block_n, mode=mode,
+                         fused=fused)
 
 
 def xt_u(X, u, *, block_d=512, block_n=512, mode=None):
@@ -139,8 +188,14 @@ def x_cz_multi(X, c, Z, *, block_d=512, block_n=512, mode=None):
     return Y[:d, :s]
 
 
-@functools.partial(jax.jit, static_argnames=("block_d", "block_n", "mode"))
-def _glm_hvp_multi_impl(X, c, U, lam, *, block_d, block_n, mode):
+@functools.partial(jax.jit, static_argnames=("block_d", "block_n", "mode",
+                                             "fused"))
+def _glm_hvp_multi_impl(X, c, U, lam, *, block_d, block_n, mode, fused):
+    if fused:
+        n = X.shape[1]
+        Y = x_c_xt_multi(X, c, U, block_d=block_d, block_n=block_n,
+                         mode=mode)
+        return Y / n + lam * U
     if mode == "ref":
         return _ref.ref_glm_hvp_multi(X, c, U, lam)
     n = X.shape[1]
@@ -149,48 +204,188 @@ def _glm_hvp_multi_impl(X, c, U, lam, *, block_d, block_n, mode):
     return Y / n + lam * U
 
 
-def glm_hvp_multi(X, c, U, lam, *, block_d=512, block_n=512, mode=None):
-    """Batched H U = X diag(c) X^T U / n + lam U over s probe vectors."""
+def glm_hvp_multi(X, c, U, lam, *, block_d=512, block_n=512, mode=None,
+                  fused=False):
+    """Batched H U = X diag(c) X^T U / n + lam U over s probe vectors.
+
+    ``fused=True`` uses the one-pass panel-resident kernel
+    (:func:`x_c_xt_multi`), halving HBM reads of X per round."""
     mode = mode or _mode()
-    return _glm_hvp_multi_impl(X, c, U, jnp.asarray(lam, X.dtype),
-                               block_d=block_d, block_n=block_n, mode=mode)
+    return _glm_hvp_multi_impl(X, c, U, jnp.asarray(lam, jnp.float32),
+                               block_d=block_d, block_n=block_n, mode=mode,
+                               fused=fused)
+
+
+# ---------------------------------------------------------------------------
+# fused one-pass GLM HVP (panel-resident; docs/kernels.md)
+# ---------------------------------------------------------------------------
+
+def x_c_xt_u(X, c, u, *, block_d=512, block_n=512, mode=None,
+             out_dtype=jnp.float32):
+    """y = X (c .* (X^T u)) in ONE streaming pass over X.
+
+    The local fused HVP core: both directions run from the same
+    VMEM-resident (d, block_n) column panel, so X streams from HBM once
+    per application instead of twice. Legal wherever no collective
+    separates the passes (DiSCO-S local products, single-shard DiSCO-F,
+    the s-step zero-communication basis operators). Falls back to the
+    two-pass kernels when the panel exceeds the fused VMEM budget
+    (``REPRO_FUSED_VMEM_BYTES``). Accumulates f32, returns ``out_dtype``.
+    """
+    mode = mode or _mode()
+    if mode == "ref":
+        return _ref.ref_x_c_xt_u(X, c, u).astype(out_dtype)
+    interp = mode == "interpret"
+    d, n = X.shape
+    if _fused_panel_fits(-(-d // LANE) * LANE, block_n,
+                         X.dtype.itemsize):
+        Xp, _ = _pad_axis(X, 0, LANE)
+        Xp, _ = _pad_axis(Xp, 1, block_n)
+        cp, _ = _pad_axis(c, 0, block_n)
+        up, _ = _pad_axis(u, 0, LANE)
+        y = _hvp.x_c_xt_u(Xp, cp, up, block_n=block_n, interpret=interp,
+                          out_dtype=out_dtype)
+        return y[:d]
+    z = xt_u(X, u, block_d=block_d, block_n=block_n, mode=mode)
+    return x_cz_local(X, c, z, block_d=block_d, block_n=block_n,
+                      mode=mode).astype(out_dtype)
+
+
+def x_c_xt_multi(X, c, U, *, block_d=512, block_n=512, mode=None,
+                 out_dtype=jnp.float32):
+    """Y = X (c .* (X^T U)) in ONE streaming pass over X (s vectors).
+
+    Multi-vector fused HVP core for the s-step rounds: one resident
+    panel read serves both directions of all s probe vectors (s padded
+    to the TPU lane width and cropped back). Same fallback contract as
+    :func:`x_c_xt_u`.
+    """
+    mode = mode or _mode()
+    if mode == "ref":
+        return _ref.ref_x_c_xt_multi(X, c, U).astype(out_dtype)
+    interp = mode == "interpret"
+    d, n = X.shape
+    s = U.shape[1]
+    if _fused_panel_fits(-(-d // LANE) * LANE, block_n,
+                         X.dtype.itemsize, s_pad=-(-s // LANE) * LANE):
+        Xp, _ = _pad_axis(X, 0, LANE)
+        Xp, _ = _pad_axis(Xp, 1, block_n)
+        cp, _ = _pad_axis(c, 0, block_n)
+        Up, _ = _pad_axis(U, 0, LANE)
+        Up, _ = _pad_axis(Up, 1, LANE)
+        Y = _hvp.x_c_xt_multi(Xp, cp, Up, block_n=block_n,
+                              interpret=interp, out_dtype=out_dtype)
+        return Y[:d, :s]
+    Z = xt_multi(X, U, block_d=block_d, block_n=block_n, mode=mode)
+    return x_cz_multi(X, c, Z, block_d=block_d, block_n=block_n,
+                      mode=mode).astype(out_dtype)
 
 
 # ---------------------------------------------------------------------------
 # Blocked-ELL sparse HVP passes (see data/sparse.py for the layout)
 # ---------------------------------------------------------------------------
 
-def ell_matvec(data, cols, v, c=None, *, mode=None):
+def ell_matvec(data, cols, v, c=None, *, mode=None, out_dtype=jnp.float32):
     """y = A @ (c .* v) for a blocked-ELL operand (sparse HVP pass).
 
     data : (nb, W, br, bc) tiles; cols : (nb, W) int32 column-block ids
     v    : (ncb * bc,) padded input; c optional same-length fused scale
-    returns (nb * br,). Streaming the forward layout of a shard computes
-    ``X_loc @ (c * z)`` (pass B); streaming the transposed layout computes
-    ``X_loc^T u`` (pass A) — one kernel covers both HVP directions
+    returns (nb * br,) in ``out_dtype`` (default f32, the accumulator
+    dtype — bf16 tile storage must not round intermediate results).
+    Streaming the forward layout of a shard computes ``X_loc @ (c * z)``
+    (pass B); streaming the transposed layout computes ``X_loc^T u``
+    (pass A) — one kernel covers both HVP directions
     (docs/architecture.md#kernels).
     """
     mode = mode or _mode()
     if mode == "ref":
-        return _ref.ref_ell_mv(data, cols, v, c)
+        return _ref.ref_ell_mv(data, cols, v, c, out_dtype=out_dtype)
     return _sparse.ell_mv(data, cols, v, c,
-                          interpret=(mode == "interpret"))
+                          interpret=(mode == "interpret"),
+                          out_dtype=out_dtype)
 
 
-def ell_matmat(data, cols, V, c=None, *, mode=None):
+def ell_matmat(data, cols, V, c=None, *, mode=None, out_dtype=jnp.float32):
     """Y = A @ (c[:, None] .* V) over s probe vectors (s-step rounds).
 
-    V : (ncb * bc, s) -> (nb * br, s). The s axis is padded to the TPU
-    lane width for the native kernel and cropped back, mirroring
-    ``xt_multi``/``x_cz_multi``.
+    V : (ncb * bc, s) -> (nb * br, s) in ``out_dtype``. The s axis is
+    padded to the TPU lane width for the native kernel and cropped back,
+    mirroring ``xt_multi``/``x_cz_multi``.
     """
     mode = mode or _mode()
     if mode == "ref":
-        return _ref.ref_ell_mm(data, cols, V, c)
+        return _ref.ref_ell_mm(data, cols, V, c, out_dtype=out_dtype)
     s = V.shape[1]
     Vp, _ = _pad_axis(V, 1, LANE)
     Y = _sparse.ell_mm(data, cols, Vp, c,
-                       interpret=(mode == "interpret"))
+                       interpret=(mode == "interpret"),
+                       out_dtype=out_dtype)
+    return Y[:, :s]
+
+
+def ell_hvp(dataT, colsT, u, c=None, *, fwd=None, mode=None,
+            out_dtype=jnp.float32):
+    """One-pass blocked-ELL HVP: y = A (c .* (A^T u)).
+
+    Streams only the *transposed* layout (``dataT``/``colsT``) — each
+    resident tile row serves both HVP directions, so tile HBM traffic
+    halves versus the two-pass ``ell_matvec`` pair (docs/kernels.md).
+    ``u`` lives on A's padded row axis (nrb * br), ``c`` on its padded
+    column axis. ``fwd=(data, cols)`` optionally supplies the forward
+    layout: it enables the two-pass fallback when the fused working set
+    exceeds the VMEM budget, and makes the 'ref'-mode dispatch take the
+    exact two-oracle-pass path (bit-identical to the two-pass HVP in
+    f32). Returns f32-accumulated ``out_dtype``.
+    """
+    mode = mode or _mode()
+    if mode == "ref":
+        if fwd is not None:
+            z = _ref.ref_ell_mv(dataT, colsT, u)
+            return _ref.ref_ell_mv(fwd[0], fwd[1], z, c,
+                                   out_dtype=out_dtype)
+        return _ref.ref_ell_hvp_t(dataT, colsT, u, c, out_dtype=out_dtype)
+    interp = mode == "interpret"
+    if not _fused_ell_fits(dataT, u.shape[0]):
+        if fwd is not None:
+            z = _sparse.ell_mv(dataT, colsT, u, interpret=interp)
+            return _sparse.ell_mv(fwd[0], fwd[1], z, c, interpret=interp,
+                                  out_dtype=out_dtype)
+        return _ref.ref_ell_hvp_t(dataT, colsT, u, c, out_dtype=out_dtype)
+    return _sparse.ell_hvp(dataT, colsT, u, c, interpret=interp,
+                           out_dtype=out_dtype)
+
+
+def ell_hvp_mm(dataT, colsT, U, c=None, *, fwd=None, mode=None,
+               out_dtype=jnp.float32):
+    """One-pass blocked-ELL multi-vector HVP: Y = A (c .* (A^T U)).
+
+    U : (nrb * br, s) -> (nrb * br, s); the s axis is padded to the TPU
+    lane width for the native kernel and cropped back. Same layout,
+    fallback and ``fwd`` contract as :func:`ell_hvp` — one resident tile
+    read serves both directions of all s probe vectors.
+    """
+    mode = mode or _mode()
+    if mode == "ref":
+        if fwd is not None:
+            Z = _ref.ref_ell_mm(dataT, colsT, U)
+            return _ref.ref_ell_mm(fwd[0], fwd[1], Z, c,
+                                   out_dtype=out_dtype)
+        return _ref.ref_ell_hvp_mm_t(dataT, colsT, U, c,
+                                     out_dtype=out_dtype)
+    interp = mode == "interpret"
+    s = U.shape[1]
+    if not _fused_ell_fits(dataT, U.shape[0], s):
+        if fwd is not None:
+            Z = _sparse.ell_mm(dataT, colsT,
+                               _pad_axis(U, 1, LANE)[0], c=None,
+                               interpret=interp)[:, :s]
+            return ell_matmat(fwd[0], fwd[1], Z, c, mode=mode,
+                              out_dtype=out_dtype)
+        return _ref.ref_ell_hvp_mm_t(dataT, colsT, U, c,
+                                     out_dtype=out_dtype)
+    Up, _ = _pad_axis(U, 1, LANE)
+    Y = _sparse.ell_hvp_mm(dataT, colsT, Up, c, interpret=interp,
+                           out_dtype=out_dtype)
     return Y[:, :s]
 
 

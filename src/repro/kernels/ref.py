@@ -48,33 +48,85 @@ def ref_glm_hvp_multi(X, c, U, lam, n_global=None):
     return ref_x_cz_multi(X, c, ref_xt_multi(X, U)) / n + lam * U
 
 
-def ref_ell_mv(data, cols, v, c=None):
+def ref_x_c_xt_u(X, c, u):
+    """Fused one-pass HVP core  y = X (c .* (X^T u)).
+
+    Exactly the two-pass chain ``ref_x_cz(X, c * ref_xt_u(X, u))`` — the
+    fused kernels change the dataflow (one X read), not the math, so the
+    oracle is the composition (and the f32 ref-mode fused path is
+    bit-identical to the two-pass ref-mode path by construction).
+    """
+    return ref_x_cz(X, c * ref_xt_u(X, u))
+
+
+def ref_x_c_xt_multi(X, c, U):
+    """Fused one-pass multi-vector HVP core  Y = X (c .* (X^T U))."""
+    return ref_x_cz_multi(X, c, ref_xt_multi(X, U))
+
+
+def ref_ell_mv(data, cols, v, c=None, out_dtype=jnp.float32):
     """Blocked-ELL generalized matvec  y = A (c .* v).
 
     data : (nb, W, br, bc) tiles, cols : (nb, W) column-block indices,
     v/c  : (ncb * bc,) padded vectors. Padding slots (cols = 0, zero tile)
     gather a real vector block and multiply it by zeros — same contract as
-    the Pallas kernel (sparse_hvp.py).
+    the Pallas kernel (sparse_hvp.py). Returns ``out_dtype`` (default
+    f32, the accumulator dtype — matching the kernel's out_dtype
+    contract under bf16 tile storage).
     """
     nb, w, br, bc = data.shape
     vv = v if c is None else c * v
     g = vv.reshape(-1, bc)[cols]                       # (nb, W, bc)
-    y = jnp.einsum("iwab,iwb->ia", data, g)
-    return y.reshape(nb * br).astype(data.dtype)
+    y = jnp.einsum("iwab,iwb->ia", data.astype(jnp.float32),
+                   g.astype(jnp.float32))
+    return y.reshape(nb * br).astype(out_dtype)
 
 
-def ref_ell_mm(data, cols, V, c=None):
+def ref_ell_mm(data, cols, V, c=None, out_dtype=jnp.float32):
     """Blocked-ELL generalized matmat  Y = A (c[:, None] .* V).
 
-    V : (ncb * bc, s) -> (nb * br, s); the multi-vector oracle of the
-    s-step sparse HVP round.
+    V : (ncb * bc, s) -> (nb * br, s) in ``out_dtype``; the multi-vector
+    oracle of the s-step sparse HVP round.
     """
     nb, w, br, bc = data.shape
     s = V.shape[1]
     VV = V if c is None else c[:, None] * V
     g = VV.reshape(-1, bc, s)[cols]                    # (nb, W, bc, s)
-    y = jnp.einsum("iwab,iwbs->ias", data, g)
-    return y.reshape(nb * br, s).astype(data.dtype)
+    y = jnp.einsum("iwab,iwbs->ias", data.astype(jnp.float32),
+                   g.astype(jnp.float32))
+    return y.reshape(nb * br, s).astype(out_dtype)
+
+
+def ref_ell_hvp_t(dataT, colsT, u, c=None, out_dtype=jnp.float32):
+    """Fused one-pass ELL HVP oracle from the transposed layout alone.
+
+    y = A (c .* (A^T u)) where only A^T's blocked-ELL tiles are given:
+    pass A is :func:`ref_ell_mv` on the transposed layout; pass B
+    re-reads the same tiles, contracting each against its scaled z block
+    and scatter-adding into the output row-blocks (mirroring the fused
+    kernel's in-VMEM scatter). u : (nrb * br,), returns the same.
+    """
+    ncb, wt, bc, br = dataT.shape
+    nrb = u.shape[0] // br
+    z = ref_ell_mv(dataT, colsT, u)                    # (ncb * bc,)
+    cz = z if c is None else c * z
+    g = cz.reshape(ncb, bc).astype(jnp.float32)
+    contrib = jnp.einsum("jwab,ja->jwb", dataT.astype(jnp.float32), g)
+    y = jnp.zeros((nrb, br), jnp.float32).at[colsT].add(contrib)
+    return y.reshape(nrb * br).astype(out_dtype)
+
+
+def ref_ell_hvp_mm_t(dataT, colsT, U, c=None, out_dtype=jnp.float32):
+    """Multi-vector twin of :func:`ref_ell_hvp_t` (U: (nrb * br, s))."""
+    ncb, wt, bc, br = dataT.shape
+    s = U.shape[1]
+    nrb = U.shape[0] // br
+    Z = ref_ell_mm(dataT, colsT, U)                    # (ncb * bc, s)
+    CZ = Z if c is None else c[:, None] * Z
+    g = CZ.reshape(ncb, bc, s).astype(jnp.float32)
+    contrib = jnp.einsum("jwab,jas->jwbs", dataT.astype(jnp.float32), g)
+    y = jnp.zeros((nrb, br, s), jnp.float32).at[colsT].add(contrib)
+    return y.reshape(nrb * br, s).astype(out_dtype)
 
 
 def ref_attention(q, k, v, causal=True, window=0, scale=None):

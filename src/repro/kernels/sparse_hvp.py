@@ -30,6 +30,17 @@ Multi-vector variants (``*_mm``) amortize each tile read over ``s`` probe
 vectors for the s-step PCG engine, identical to the dense
 ``xt_multi``/``x_cz_multi`` story (DESIGN.md §2).
 
+Fused one-pass HVP (``ell_hvp`` / ``ell_hvp_mm``, docs/kernels.md): when
+no collective separates the two HVP directions, the whole
+``y = A (c .* (A^T u))`` runs from the transposed layout alone — the
+grid walks its row-blocks, each program holds one block's entire padded
+tile row in VMEM, computes that block's ``z`` slice, scales it, and
+scatters the pass-B contributions from the *same resident tiles*. The
+forward layout is never read: tile HBM traffic halves versus the
+two-pass pair (and halves again under bf16 tile storage,
+``DiscoConfig.hvp_dtype``). All kernels accumulate in f32 and return
+``out_dtype`` (default f32) regardless of the tile dtype.
+
 Cost model: one pass touches ``nb * W`` tiles — so the per-shard work is
 proportional to the *padded* tile count. The LPT partitioner balances
 per-shard nnz (the straggler time between barrier collectives); this
@@ -68,19 +79,22 @@ def _ell_mv_kernel(cols_ref, x_ref, c_ref, v_ref, y_ref):
                           preferred_element_type=jnp.float32).T
 
 
-def ell_mv(data, cols, v, c=None, *, interpret=False):
+def ell_mv(data, cols, v, c=None, *, interpret=False,
+           out_dtype=jnp.float32):
     """y = A @ (c .* v) for a blocked-ELL operand.
 
     data : (nb, W, br, bc) tiles;  cols : (nb, W) int32
     v    : (ncb * bc,) input vector (padded length)
     c    : optional (ncb * bc,) per-element scale (fused in-kernel)
-    returns (nb * br,) in ``data.dtype``
+    returns (nb * br,) in ``out_dtype`` (default f32 — the in-kernel
+    accumulator dtype; casting to ``data.dtype`` would silently round it
+    under bf16 tile storage)
     """
     nb, w, br, bc = data.shape
     assert v.shape[0] % bc == 0, (v.shape, bc)
     ncb = v.shape[0] // bc
     if c is None:
-        c = jnp.ones_like(v)
+        c = jnp.ones(v.shape, jnp.float32)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(nb, w),
@@ -97,7 +111,7 @@ def ell_mv(data, cols, v, c=None, *, interpret=False):
         out_shape=jax.ShapeDtypeStruct((nb, br), jnp.float32),
         interpret=interpret,
     )(cols, data, c.reshape(ncb, bc), v.reshape(ncb, bc))
-    return out.reshape(nb * br).astype(data.dtype)
+    return out.reshape(nb * br).astype(out_dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -119,10 +133,12 @@ def _ell_mm_kernel(cols_ref, x_ref, c_ref, v_ref, y_ref):
     y_ref[0] += jnp.dot(x, cv, preferred_element_type=jnp.float32)
 
 
-def ell_mm(data, cols, V, c=None, *, interpret=False):
+def ell_mm(data, cols, V, c=None, *, interpret=False,
+           out_dtype=jnp.float32):
     """Y = A @ (c[:, None] .* V) for a blocked-ELL operand.
 
-    V : (ncb * bc, s) probe block -> returns (nb * br, s). Each tile read
+    V : (ncb * bc, s) probe block -> returns (nb * br, s) in
+    ``out_dtype`` (default f32, the accumulator dtype). Each tile read
     from HBM is amortized over all ``s`` columns (the s-step engine's
     arithmetic-intensity win, same as the dense multi-vector kernels).
     """
@@ -131,7 +147,7 @@ def ell_mm(data, cols, V, c=None, *, interpret=False):
     assert n_in % bc == 0, (V.shape, bc)
     ncb = n_in // bc
     if c is None:
-        c = jnp.ones((n_in,), V.dtype)
+        c = jnp.ones((n_in,), jnp.float32)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(nb, w),
@@ -148,4 +164,137 @@ def ell_mm(data, cols, V, c=None, *, interpret=False):
         out_shape=jax.ShapeDtypeStruct((nb, br, s), jnp.float32),
         interpret=interpret,
     )(cols, data, c.reshape(ncb, bc), V)
-    return out.reshape(nb * br, s).astype(data.dtype)
+    return out.reshape(nb * br, s).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# fused one-pass HVP:  y = A (c .* (A^T u))  from the transposed layout
+# ---------------------------------------------------------------------------
+
+def _ell_hvp_kernel(cols_ref, xT_ref, c_ref, u_ref, y_ref):
+    """Grid (ncb,): sample-block j's whole transposed tile row resident.
+
+    Pass A runs a static loop over the row's WT tiles accumulating
+    z = A^T u for this block (gathering u blocks by the prefetched
+    column ids), the phi'' scale is applied, and pass B walks the SAME
+    resident tiles scattering y[cols[j, k]] += cz @ tile — each tile is
+    read from HBM exactly once for the whole HVP.
+    """
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    wt, bc = xT_ref.shape[1], xT_ref.shape[2]
+    z = jnp.zeros((1, bc), jnp.float32)
+    for k in range(wt):
+        t = xT_ref[0, k]                                  # (bc, br)
+        ub = u_ref[pl.ds(cols_ref[j, k], 1), :]           # (1, br)
+        z = z + jax.lax.dot_general(
+            ub, t, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    cz = (c_ref[...] * z).astype(xT_ref.dtype)            # (1, bc)
+    for k in range(wt):
+        t = xT_ref[0, k]
+        y_ref[pl.ds(cols_ref[j, k], 1), :] += jnp.dot(
+            cz, t, preferred_element_type=jnp.float32)
+
+
+def ell_hvp(dataT, colsT, u, c=None, *, interpret=False,
+            out_dtype=jnp.float32):
+    """One-pass blocked-ELL HVP: y = A (c .* (A^T u)).
+
+    dataT/colsT : the *transposed* blocked-ELL layout of the local
+    operand A (row-blocks = A's column blocks), shapes (ncb, WT, bc, br)
+    / (ncb, WT). u : (nrb * br,) over A's padded row axis; c : optional
+    (ncb * bc,) phi'' scale over A's padded column axis. Returns
+    (nrb * br,) in ``out_dtype`` (f32 accumulation).
+
+    The forward layout is never touched — tile HBM traffic halves
+    versus the two-pass ``ell_mv`` pair. VMEM per program is the whole
+    (WT, bc, br) tile row plus the full u and y vectors; the ops.py
+    wrapper enforces the budget and falls back when it is exceeded.
+    """
+    ncb, wt, bc, br = dataT.shape
+    assert u.shape[0] % br == 0, (u.shape, br)
+    nrb = u.shape[0] // br
+    if c is None:
+        c = jnp.ones((ncb * bc,), jnp.float32)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(ncb,),
+        in_specs=[
+            pl.BlockSpec((1, wt, bc, br), lambda j, cols: (j, 0, 0, 0)),
+            pl.BlockSpec((1, bc), lambda j, cols: (j, 0)),
+            pl.BlockSpec((nrb, br), lambda j, cols: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((nrb, br), lambda j, cols: (0, 0)),
+    )
+    out = pl.pallas_call(
+        _ell_hvp_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nrb, br), jnp.float32),
+        interpret=interpret,
+    )(colsT, dataT, c.reshape(ncb, bc),
+      u.astype(dataT.dtype).reshape(nrb, br))
+    return out.reshape(nrb * br).astype(out_dtype)
+
+
+def _ell_hvp_mm_kernel(cols_ref, xT_ref, c_ref, u_ref, y_ref):
+    """Multi-vector twin of :func:`_ell_hvp_kernel`: Z = A_j^T U from
+    the resident tile row, then Y[cols[j, k]] += tile^T @ (c .* Z)."""
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    wt, bc = xT_ref.shape[1], xT_ref.shape[2]
+    s = u_ref.shape[2]
+    z = jnp.zeros((bc, s), jnp.float32)
+    for k in range(wt):
+        t = xT_ref[0, k]                                  # (bc, br)
+        ub = u_ref[cols_ref[j, k]]                        # (br, s)
+        z = z + jnp.dot(t, ub, preferred_element_type=jnp.float32)
+    cz = (c_ref[...].reshape(-1, 1) * z).astype(xT_ref.dtype)
+    for k in range(wt):
+        t = xT_ref[0, k]
+        y_ref[cols_ref[j, k]] += jax.lax.dot_general(
+            t, cz, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+
+def ell_hvp_mm(dataT, colsT, U, c=None, *, interpret=False,
+               out_dtype=jnp.float32):
+    """One-pass blocked-ELL multi-vector HVP: Y = A (c .* (A^T U)).
+
+    U : (nrb * br, s) probe block -> (nrb * br, s) in ``out_dtype``.
+    Same residency contract as :func:`ell_hvp`; each resident tile
+    serves both directions of all ``s`` probe vectors — the s-step
+    round's sparse HVP at half its two-pass tile traffic.
+    """
+    ncb, wt, bc, br = dataT.shape
+    n_out, s = U.shape
+    assert n_out % br == 0, (U.shape, br)
+    nrb = n_out // br
+    if c is None:
+        c = jnp.ones((ncb * bc,), jnp.float32)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(ncb,),
+        in_specs=[
+            pl.BlockSpec((1, wt, bc, br), lambda j, cols: (j, 0, 0, 0)),
+            pl.BlockSpec((1, bc), lambda j, cols: (j, 0)),
+            pl.BlockSpec((nrb, br, s), lambda j, cols: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((nrb, br, s), lambda j, cols: (0, 0, 0)),
+    )
+    out = pl.pallas_call(
+        _ell_hvp_mm_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nrb, br, s), jnp.float32),
+        interpret=interpret,
+    )(colsT, dataT, c.reshape(ncb, bc),
+      U.astype(dataT.dtype).reshape(nrb, br, s))
+    return out.reshape(nrb * br, s).astype(out_dtype)

@@ -3,7 +3,8 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast bench bench-smoke bench-sstep bench-loadbalance \
-	bench-streaming bench-serving bench-hvp serve-demo docs-check
+	bench-streaming bench-serving bench-hvp bench-faults serve-demo \
+	docs-check
 
 test: docs-check bench-smoke ## tier-1 verify: docs gate + bench smoke + full suite
 	$(PY) -m pytest -x -q
@@ -34,6 +35,9 @@ bench-serving:   ## online GLM serving gate only (parity + throughput + warm ref
 
 bench-hvp:       ## fused one-pass HVP + mixed-precision gate only (BENCH_hvp.json)
 	$(PY) -m benchmarks.bench_hvp_fused
+
+bench-faults:    ## fault-tolerance gate only (straggler re-plan recovery + retry accuracy)
+	$(PY) -m benchmarks.bench_faults
 
 serve-demo:      ## end-to-end serving demo: fit -> publish -> score -> refit -> hot swap
 	$(PY) examples/glm_serve_demo.py

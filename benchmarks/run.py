@@ -25,7 +25,7 @@ def main(argv=None):
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig3,fig4,fig5,table4,"
                          "sstep,loadbalance,streaming,serving,hvp_fused,"
-                         "woodbury,amdahl,roofline")
+                         "faults,woodbury,amdahl,roofline")
     args = ap.parse_args(argv)
 
     if args.smoke:
@@ -40,7 +40,8 @@ def main(argv=None):
         if args.quick and not args.smoke:
             # these run many full fits (or a forced-8-device subprocess)
             return name not in ("fig3", "sstep", "loadbalance",
-                                "streaming", "serving", "hvp_fused")
+                                "streaming", "serving", "hvp_fused",
+                                "faults")
         return True
 
     t0 = time.perf_counter()
@@ -71,6 +72,10 @@ def main(argv=None):
     if want("hvp_fused"):
         from benchmarks import bench_hvp_fused
         bench_hvp_fused.run()
+        print()
+    if want("faults"):
+        from benchmarks import bench_faults
+        bench_faults.run()
         print()
     if want("woodbury"):
         from benchmarks import bench_woodbury

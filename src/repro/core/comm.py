@@ -409,3 +409,44 @@ def glm_serving_throughput(batch: int, nnz_per_req: float, *,
     return dict(batched_rps=batched_rps, sequential_rps=sequential_rps,
                 speedup=batched_rps / sequential_rps,
                 tick_s=tick["total_s"])
+
+
+def elastic_replan_model(chunk_seconds, schedule_before, schedule_after,
+                         passes_remaining: int,
+                         replan_overhead_s: float = 0.0) -> dict:
+    """Modeled wall-clock of finishing a solve with vs without a re-plan.
+
+    The elastic re-planner (:mod:`repro.robust.straggler`) swaps the
+    chunk->shard schedule when observed per-chunk seconds are imbalanced;
+    this is the analytic twin of that decision, in the same barrier terms
+    the rest of this module uses: one pass of a schedule costs
+    ``sum_t max_s chunk_seconds`` (every collective waits for the
+    slowest shard), so ``passes_remaining`` passes cost that much each,
+    and the re-planned variant additionally pays ``replan_overhead_s``
+    once (the LPT re-run plus re-permuting the resident vectors — no
+    chunk data moves, chunks live in the store).
+
+    Returns a dict with ``static_s`` (keep the old schedule),
+    ``replanned_s`` (overhead + new-schedule passes), ``gain``
+    (static / replanned; > 1 means the re-plan pays), and
+    ``break_even_passes`` (passes after which it pays; ``inf`` when the
+    new schedule is no faster).
+
+    The ``bench_faults`` gate checks the *measured* counterpart of
+    ``gain`` on an injected 4x straggler.
+    """
+    from repro.robust.straggler import barrier_seconds
+
+    cs = np.asarray(chunk_seconds, np.float64)
+    before = barrier_seconds(np.asarray(schedule_before), cs)
+    after = barrier_seconds(np.asarray(schedule_after), cs)
+    static_s = before * passes_remaining
+    replanned_s = replan_overhead_s + after * passes_remaining
+    per_pass_gain = before - after
+    break_even = (replan_overhead_s / per_pass_gain
+                  if per_pass_gain > 0 else float("inf"))
+    return dict(static_s=float(static_s),
+                replanned_s=float(replanned_s),
+                gain=float(static_s / replanned_s) if replanned_s > 0
+                else float("inf"),
+                break_even_passes=float(break_even))

@@ -31,6 +31,11 @@ from repro.core.pcg import pcg_features, pcg_samples
 from repro.data.partition import Partition, make_partition
 from repro.data.sparse import (CSRMatrix, EllPair, build_shard_ell_pairs,
                                hvp_tile_dtype, shard_csrs_from_partition)
+from repro.robust.checkpoint import (CheckpointState, load_checkpoint,
+                                     save_checkpoint)
+from repro.robust.faults import FaultInjector, FaultPlan
+from repro.robust.retry import RetryPolicy
+from repro.robust.straggler import ChunkTimingLedger, ElasticReplanner
 from repro.utils.compat import shard_map
 from repro.utils.padding import pad_to_multiple
 
@@ -99,6 +104,22 @@ class DiscoConfig:
             background prefetch thread keeps in flight ahead of the
             kernels; peak data-plane memory scales with
             ``stream_chunk_size * prefetch_depth`` (docs/streaming.md).
+        elastic_replan: out-of-core solves — watch per-chunk measured
+            load seconds and re-run the chunk-granular LPT on them when
+            the observed shard imbalance exceeds ``replan_threshold``
+            (docs/robustness.md). DiSCO-S re-plans between PCG rounds
+            (the PCG state is replicated, so the swap is exact);
+            DiSCO-F re-plans at outer-iteration boundaries (its PCG
+            state and block-diagonal preconditioner are tied to the
+            shard membership).
+        replan_threshold: observed max/mean per-shard seconds that arms
+            an elastic re-plan (1.0 is a perfect balance).
+        io_retries: out-of-core solves — bounded retries per stream
+            step on transient I/O errors (0 disables).
+        io_backoff_s: first-retry backoff (seconds; doubles per retry).
+        io_deadline_s: per-step wall-clock budget across all attempts
+            (0 = no deadline); exceeding it raises
+            :class:`repro.robust.retry.StepDeadlineExceeded`.
         seed: PRNG seed (Hessian subsampling draws).
     """
 
@@ -124,6 +145,11 @@ class DiscoConfig:
     ell_block_n: int = 128          # sparse tile cols (sample axis)
     stream_chunk_size: int = 4096   # out-of-core: indices per disk chunk
     prefetch_depth: int = 2         # out-of-core: chunks prefetched ahead
+    elastic_replan: bool = False    # re-plan shards on measured chunk cost
+    replan_threshold: float = 1.5   # observed max/mean seconds that arms it
+    io_retries: int = 3             # stream-step retries on transient I/O
+    io_backoff_s: float = 0.05      # first-retry backoff (doubles each try)
+    io_deadline_s: float = 0.0      # per-step wall-clock budget (0 = none)
     seed: int = 0
 
 
@@ -146,6 +172,9 @@ class DiscoResult:
             byte ledger (``peak_bytes``, ``bytes_loaded``, ``passes``,
             ``max_step_bytes``; see
             :class:`repro.data.stream.PrefetchStats`); None otherwise.
+        replan_events: elastic re-plans that fired during the solve
+            (plain dicts of :class:`repro.robust.straggler.ReplanEvent`);
+            empty unless ``cfg.elastic_replan`` triggered.
     """
 
     w: np.ndarray
@@ -154,6 +183,8 @@ class DiscoResult:
     converged: bool
     partition_info: dict[str, Any] | None = None
     stream_stats: dict[str, Any] | None = None
+    replan_events: list[dict[str, Any]] = dataclasses.field(
+        default_factory=list)
 
     @property
     def grad_norms(self) -> np.ndarray:
@@ -203,6 +234,10 @@ class DiscoSolver:
 
     def __init__(self, X, y, cfg: DiscoConfig, mesh: Mesh | None = None):
         self._streaming = False
+        self._faults: FaultInjector | None = None
+        self._replanner: ElasticReplanner | None = None
+        self._replan_events: list[dict] = []
+        self._outer_iter = 0
         self._sparse = isinstance(X, CSRMatrix)
         if not self._sparse:
             X = np.asarray(X)
@@ -589,8 +624,8 @@ class DiscoSolver:
     # ------------------------------------------------------------------
 
     @classmethod
-    def from_store(cls, store, cfg: DiscoConfig, mesh: Mesh | None = None
-                   ) -> "DiscoSolver":
+    def from_store(cls, store, cfg: DiscoConfig, mesh: Mesh | None = None,
+                   fault_plan: FaultPlan | None = None) -> "DiscoSolver":
         """Build a solver that *streams* a :class:`repro.data.store.ShardStore`.
 
         The store's chunked axis must match ``cfg.partition``. Peak
@@ -603,6 +638,15 @@ class DiscoSolver:
         stopping rules and preconditioners are identical to the
         in-memory solver; :meth:`fit` works unchanged and additionally
         reports ``DiscoResult.stream_stats``.
+
+        Robustness (docs/robustness.md): stream steps are retried per
+        ``cfg.io_retries``/``io_backoff_s``/``io_deadline_s``; with
+        ``cfg.elastic_replan`` the per-chunk timing ledger feeds an
+        :class:`repro.robust.straggler.ElasticReplanner` that
+        re-balances the chunk→shard schedule on *measured* seconds.
+        ``fault_plan`` (tests/benchmarks only) threads a
+        :class:`repro.robust.faults.FaultPlan` into the chunk read path
+        and the outer loop.
         """
         from repro.data.stream import plan_streams
 
@@ -622,6 +666,8 @@ class DiscoSolver:
         self.axis = axis
         self.mesh = mesh if mesh is not None else _single_axis_mesh(axis)
         self.m = self.mesh.shape[axis]
+        self._replan_events = []
+        self._outer_iter = 0
 
         def put(arrs):
             out = {}
@@ -631,11 +677,23 @@ class DiscoSolver:
                     jnp.asarray(a), NamedSharding(self.mesh, spec))
             return out
 
+        self._faults = (FaultInjector(fault_plan)
+                        if fault_plan is not None else None)
+        retry = (RetryPolicy(max_retries=cfg.io_retries,
+                             backoff_s=cfg.io_backoff_s,
+                             deadline_s=cfg.io_deadline_s)
+                 if cfg.io_retries > 0 or cfg.io_deadline_s > 0 else None)
+        ledger = ChunkTimingLedger(store.n_chunks)
+        self._replanner = (
+            ElasticReplanner(ledger, threshold=cfg.replan_threshold)
+            if cfg.elastic_replan else None)
         self._plan = plan_streams(
             store, self.m, cfg.partition_strategy,
             block_rows=cfg.ell_block_d, block_cols=cfg.ell_block_n,
             prefetch_depth=cfg.prefetch_depth, device_put=put,
-            hvp_dtype=hvp_tile_dtype(cfg.hvp_dtype))
+            hvp_dtype=hvp_tile_dtype(cfg.hvp_dtype),
+            timing_ledger=ledger, fault_injector=self._faults,
+            retry=retry)
         self._part = self._plan.partition
         self._init_streaming()
         self._step = self._build_step_streaming()
@@ -659,20 +717,7 @@ class DiscoSolver:
             y_p = np.pad(y, (0, self.n_padded - n)).astype(dtype)
             smask = np.zeros(self.n_padded, dtype)
             smask[:n] = 1.0
-            # permuted tau slab, assembled chunk by chunk (tau columns of
-            # each chunk's local feature rows — the only dense read)
-            X_tau = np.zeros((m, width, tau), dtype)
-            for s in range(m):
-                for t in range(T):
-                    cid = int(plan.schedule[s, t])
-                    if cid < 0:
-                        continue
-                    slab = store.chunk_csr(cid).take_cols_dense(
-                        np.arange(tau))
-                    X_tau[s, t * chunk: t * chunk + slab.shape[0]] = slab
-            self.X_tau = jax.device_put(
-                jnp.asarray(X_tau),
-                NamedSharding(self.mesh, P(self.axis, None, None)))
+            self._build_tau_features()
             self.y = jax.device_put(jnp.asarray(y_p), rep)
             self.smask = jax.device_put(jnp.asarray(smask), rep)
             self._w_sharding = NamedSharding(self.mesh, P(self.axis))
@@ -706,6 +751,27 @@ class DiscoSolver:
         self.y_tau = jax.device_put(jnp.asarray(y[:tau].astype(dtype)),
                                     rep)
 
+    def _build_tau_features(self):
+        """(Re)build the DiSCO-F per-shard dense tau preconditioner slab
+        from the CURRENT schedule — the permuted tau slab is assembled
+        chunk by chunk (tau columns of each chunk's local feature rows —
+        the only dense read), so an elastic re-plan rebuilds it to match
+        the new chunk→shard membership."""
+        plan, store, m, tau = self._plan, self._plan.store, self.m, self.tau
+        chunk, T, width = plan.chunk_size, plan.n_steps, plan.width_local
+        X_tau = np.zeros((m, width, tau), store.dtype)
+        for s in range(m):
+            for t in range(T):
+                cid = int(plan.schedule[s, t])
+                if cid < 0:
+                    continue
+                slab = store.chunk_csr(cid).take_cols_dense(
+                    np.arange(tau))
+                X_tau[s, t * chunk: t * chunk + slab.shape[0]] = slab
+        self.X_tau = jax.device_put(
+            jnp.asarray(X_tau),
+            NamedSharding(self.mesh, P(self.axis, None, None)))
+
     # -- streamed X products (each is one prefetched pass over the store)
     def _slab(self, vec, s, t):
         chunk, width = self._plan.chunk_size, self._plan.width_local
@@ -729,11 +795,13 @@ class DiscoSolver:
         if local:
             shape = (m,) + shape
         acc = jnp.zeros(shape, u.dtype)
-        for t, payload in enumerate(plan.stream("tr", hvp=hvp)):
-            for s in range(m):
-                contrib = op(payload["dataT"][s], payload["colsT"][s],
-                             self._slab(u, s, t))
-                acc = acc.at[s].add(contrib) if local else acc + contrib
+        with plan.stream("tr", hvp=hvp) as pf:
+            for t, payload in enumerate(pf):
+                for s in range(m):
+                    contrib = op(payload["dataT"][s], payload["colsT"][s],
+                                 self._slab(u, s, t))
+                    acc = (acc.at[s].add(contrib) if local
+                           else acc + contrib)
         return acc
 
     def _stream_x(self, z, coeffs=None, local=False, multi=False,
@@ -750,11 +818,12 @@ class DiscoSolver:
         plan, m = self._plan, self.m
         op = kops.ell_matmat if multi else kops.ell_matvec
         parts = [[None] * plan.n_steps for _ in range(m)]
-        for t, payload in enumerate(plan.stream("fwd", hvp=hvp)):
-            for s in range(m):
-                zin = z[s] if local else z
-                parts[s][t] = op(payload["data"][s], payload["cols"][s],
-                                 zin, coeffs)
+        with plan.stream("fwd", hvp=hvp) as pf:
+            for t, payload in enumerate(pf):
+                for s in range(m):
+                    zin = z[s] if local else z
+                    parts[s][t] = op(payload["data"][s],
+                                     payload["cols"][s], zin, coeffs)
         return jnp.concatenate([jnp.concatenate(parts[s])
                                 for s in range(m)])
 
@@ -779,17 +848,20 @@ class DiscoSolver:
             self.d_padded, s=(u.shape[1] if multi else 1))
         if fused:
             op = kops.ell_hvp_mm if multi else kops.ell_hvp
-            for t, payload in enumerate(plan.stream("tr", hvp=True)):
-                for s in range(m):
-                    acc = acc + op(payload["dataT"][s], payload["colsT"][s],
-                                   u, self._slab(coeffs, s, t))
+            with plan.stream("tr", hvp=True) as pf:
+                for t, payload in enumerate(pf):
+                    for s in range(m):
+                        acc = acc + op(payload["dataT"][s],
+                                       payload["colsT"][s],
+                                       u, self._slab(coeffs, s, t))
             return acc
         op = kops.ell_matmat if multi else kops.ell_matvec
-        for t, payload in enumerate(plan.stream("both", hvp=True)):
-            for s in range(m):
-                z = op(payload["dataT"][s], payload["colsT"][s], u)
-                acc = acc + op(payload["data"][s], payload["cols"][s], z,
-                               self._slab(coeffs, s, t))
+        with plan.stream("both", hvp=True) as pf:
+            for t, payload in enumerate(pf):
+                for s in range(m):
+                    z = op(payload["dataT"][s], payload["colsT"][s], u)
+                    acc = acc + op(payload["data"][s], payload["cols"][s],
+                                   z, self._slab(coeffs, s, t))
         return acc
 
     def _stream_margins_samples(self, w):
@@ -799,10 +871,11 @@ class DiscoSolver:
 
         plan, m = self._plan, self.m
         parts = [[None] * plan.n_steps for _ in range(m)]
-        for t, payload in enumerate(plan.stream("tr")):
-            for s in range(m):
-                parts[s][t] = kops.ell_matvec(payload["dataT"][s],
-                                              payload["colsT"][s], w)
+        with plan.stream("tr") as pf:
+            for t, payload in enumerate(pf):
+                for s in range(m):
+                    parts[s][t] = kops.ell_matvec(payload["dataT"][s],
+                                                  payload["colsT"][s], w)
         return jnp.concatenate([jnp.concatenate(parts[s])
                                 for s in range(m)])
 
@@ -813,12 +886,70 @@ class DiscoSolver:
 
         plan, m = self._plan, self.m
         acc = jnp.zeros((self.d_padded,), d1.dtype)
-        for t, payload in enumerate(plan.stream("fwd")):
-            for s in range(m):
-                acc = acc + kops.ell_matvec(payload["data"][s],
-                                            payload["cols"][s],
-                                            self._slab(d1, s, t))
+        with plan.stream("fwd") as pf:
+            for t, payload in enumerate(pf):
+                for s in range(m):
+                    acc = acc + kops.ell_matvec(payload["data"][s],
+                                                payload["cols"][s],
+                                                self._slab(d1, s, t))
         return acc
+
+    # -- elastic re-planning (docs/robustness.md) ----------------------
+    def _replan_mapping(self, new_plan) -> np.ndarray:
+        """Index map old-permuted-position -> new-permuted-position:
+        ``vec_new = vec_old[mapping]`` re-permutes any vector living on
+        the sharded (permuted, padded) axis to the new plan's layout."""
+        return self._part.inv[new_plan.partition.perm]
+
+    def _maybe_replan_samples(self, state: dict) -> None:
+        """Between-PCG-rounds re-plan window of streaming DiSCO-S.
+
+        The PCG state (v, r, u, Hv, ...) is replicated d-space and never
+        permuted, so swapping the schedule mid-solve is *exact* — only
+        the n-space resident vectors (labels, sample weights, and the
+        in-flight Hessian coefficients in ``state``) live in the
+        permuted layout and are re-permuted here.
+        """
+        if self._replanner is None:
+            return
+        out = self._replanner.maybe_replan(
+            self._plan, outer_iter=self._outer_iter, trigger="pcg")
+        if out is None:
+            return
+        new_plan, event = out
+        mapping = self._replan_mapping(new_plan)
+        ss = NamedSharding(self.mesh, P(self.axis))
+        self.y = jax.device_put(self.y[mapping], ss)
+        self.weights = jax.device_put(self.weights[mapping], ss)
+        for k in state:
+            state[k] = state[k][mapping]
+        self._plan = new_plan
+        self._part = new_plan.partition
+        self._replan_events.append(event.to_dict())
+
+    def _maybe_replan_features(self, w):
+        """Outer-boundary re-plan window of streaming DiSCO-F.
+
+        DiSCO-F's PCG state and block-diagonal Woodbury preconditioner
+        live in the permuted *feature* layout and are tied to the shard
+        membership, so the swap happens only between outer iterations:
+        the iterate is re-permuted and the per-shard tau slab rebuilt
+        for the new schedule (the design trade-off is documented in
+        docs/robustness.md).
+        """
+        if self._replanner is None:
+            return w
+        out = self._replanner.maybe_replan(
+            self._plan, outer_iter=self._outer_iter, trigger="outer")
+        if out is None:
+            return w
+        new_plan, event = out
+        mapping = self._replan_mapping(new_plan)
+        self._plan = new_plan
+        self._part = new_plan.partition
+        self._build_tau_features()
+        self._replan_events.append(event.to_dict())
+        return jax.device_put(w[mapping], self._w_sharding)
 
     def _build_step_streaming(self):
         """Host-driven outer step: same math as the in-memory sparse
@@ -833,6 +964,7 @@ class DiscoSolver:
 
         if cfg.partition == "features":
             def step(w, key):
+                w = self._maybe_replan_features(w)
                 margins = self._stream_xt(w)                  # (n_padded,)
                 d1 = loss.d1(margins, self.y) * self.smask
                 c = loss.d2(margins, self.y) * self.smask
@@ -919,13 +1051,19 @@ class DiscoSolver:
                     cfg.precond, self.X_tau, coeffs_tau, lam, cfg.mu,
                     cfg.sag_epochs)
 
+                # mutable holder of the n-space (permuted) coefficients:
+                # an elastic re-plan between PCG rounds re-permutes it
+                # in place, so the hvp closures always stream the
+                # layout the CURRENT schedule expects
+                state = dict(c_eff=c_eff)
+
                 def hvp(u):
-                    return self._stream_hvp_samples(u, c_eff) / n \
-                        + lam * u
+                    return self._stream_hvp_samples(u, state["c_eff"]) \
+                        / n + lam * u
 
                 def hvp_multi(U):
-                    return self._stream_hvp_samples(U, c_eff, multi=True) \
-                        / n + lam * U
+                    return self._stream_hvp_samples(
+                        U, state["c_eff"], multi=True) / n + lam * U
 
                 if m == 1:
                     basis_op = hvp            # exact single-shard operator
@@ -937,11 +1075,15 @@ class DiscoSolver:
                                              * (self.X_tau.T @ u)) \
                             / tau_f + lam * u
 
+                between = (
+                    (lambda: self._maybe_replan_samples(state))
+                    if self._replanner is not None else None)
                 eps = cfg.pcg_rel_tol * gnorm
                 res = pcg_streamed(hvp, apply_precond, g, eps,
                                    cfg.max_pcg, block_s=cfg.pcg_block_s,
                                    hvp_multi=hvp_multi, basis_op=basis_op,
-                                   variant="samples")
+                                   variant="samples",
+                                   between_rounds=between)
                 w_new = w - res.v / (1.0 + res.delta)
                 stats = dict(grad_norm=gnorm, f=fval, pcg_iters=res.iters,
                              delta=res.delta, pcg_r_norm=res.r_norm)
@@ -968,32 +1110,84 @@ class DiscoSolver:
                 r2, f2, s2 = comm.disco_s_pcg_cost(self.d, pcg_iters)
         return r1 + r2, f1 + f2, s1 + s2
 
-    def fit(self, w0: np.ndarray | None = None) -> DiscoResult:
+    def _w_to_original(self, w) -> np.ndarray:
+        """Iterate ``w`` back in the original feature order (padding
+        slots dropped, any load-balancing permutation undone)."""
+        if self._sparse and self.cfg.partition == "features":
+            w_np = np.asarray(w)
+            w_full = np.zeros(self.d, w_np.dtype)
+            valid = self._part.perm < self.d
+            w_full[self._part.perm[valid]] = w_np[valid]
+            return w_full
+        return np.asarray(w)[: self.d]
+
+    def _cfg_fingerprint(self) -> dict:
+        """JSON-canonical view of ``cfg`` (what checkpoints compare)."""
+        import json
+        return json.loads(json.dumps(dataclasses.asdict(self.cfg),
+                                     default=float))
+
+    def fit(self, w0: np.ndarray | None = None, *,
+            checkpoint_dir: str | None = None, checkpoint_every: int = 1,
+            resume: bool = False) -> DiscoResult:
         """Run the damped Newton outer loop from ``w0`` (default zeros).
 
         ``w0`` is given — and ``DiscoResult.w`` returned — in the
         original feature order; any internal padding and load-balancing
         permutation is applied/undone here.
+
+        Checkpointing (docs/robustness.md): with ``checkpoint_dir`` the
+        outer state (iterate, RNG key, history, communication ledger,
+        re-plan events) is atomically persisted every
+        ``checkpoint_every`` iterations via
+        :mod:`repro.robust.checkpoint`. ``resume=True`` restarts from
+        the newest snapshot there (a no-op when none exists) and
+        continues the exact uninterrupted trajectory; the checkpoint's
+        config must match ``cfg`` — mixing two solves raises
+        ``ValueError``. The iterate is stored in original feature
+        order, so a resume may land on a different mesh size or a
+        re-planned schedule.
         """
         cfg = self.cfg
         if self._streaming:
             dtype = self._plan.store.dtype
         else:
             dtype = self.ell_data.dtype if self._sparse else self.X.dtype
+
+        history: list[dict[str, Any]] = []
+        ledger = comm.CommLedger()
+        key = jax.random.PRNGKey(cfg.seed)
+        start_iter = 0
+        if checkpoint_dir is not None and resume:
+            state = load_checkpoint(checkpoint_dir)
+            if state is not None:
+                if state.cfg != self._cfg_fingerprint():
+                    raise ValueError(
+                        f"checkpoint at {checkpoint_dir!r} was written "
+                        "by a solve with a different config; refusing "
+                        "to resume (delete the checkpoint directory or "
+                        "match the config)")
+                w0 = state.w
+                history = list(state.history)
+                ledger = comm.CommLedger(**state.ledger)
+                key = jnp.asarray(state.key)
+                start_iter = state.next_iter
+                self._replan_events = list(state.replan_events)
+
         if w0 is None:
             w = jnp.zeros(self._w_shape, dtype)
         else:
             w0 = np.pad(np.asarray(w0), (0, self._w_shape[0] - len(w0)))
             if self._sparse and cfg.partition == "features":
                 w0 = w0[self._part.perm]  # into load-balanced order
-            w = jnp.asarray(w0)
+            w = jnp.asarray(w0.astype(dtype))
         w = jax.device_put(w, self._w_sharding)
-        key = jax.random.PRNGKey(cfg.seed)
 
-        history: list[dict[str, Any]] = []
-        ledger = comm.CommLedger()
         converged = False
-        for k in range(cfg.max_outer):
+        for k in range(start_iter, cfg.max_outer):
+            self._outer_iter = k
+            if self._faults is not None:
+                self._faults.on_outer_step(k)
             key, sub = jax.random.split(key)
             w, stats = self._step(w, sub)
             stats = {s: float(v) for s, v in stats.items()}
@@ -1002,18 +1196,21 @@ class DiscoSolver:
             stats.update(outer_iter=k, comm_rounds_cum=ledger.rounds,
                          comm_floats_cum=ledger.floats)
             history.append(stats)
+            if checkpoint_dir is not None \
+                    and (k + 1) % max(checkpoint_every, 1) == 0:
+                save_checkpoint(checkpoint_dir, CheckpointState(
+                    next_iter=k + 1, w=self._w_to_original(w),
+                    key=np.asarray(key), history=history,
+                    ledger=dict(rounds=ledger.rounds,
+                                floats=ledger.floats,
+                                spmd_collectives=ledger.spmd_collectives),
+                    replan_events=list(self._replan_events),
+                    cfg=self._cfg_fingerprint()))
             if stats["grad_norm"] <= cfg.grad_tol:
                 converged = True
                 break
 
-        if self._sparse and cfg.partition == "features":
-            # undo the load-balancing permutation (padding slots dropped)
-            w_np = np.asarray(w)
-            w_full = np.zeros(self.d, w_np.dtype)
-            valid = self._part.perm < self.d
-            w_full[self._part.perm[valid]] = w_np[valid]
-        else:
-            w_full = np.asarray(w)[: self.d]
+        w_full = self._w_to_original(w)
         stream_stats = None
         if self._streaming:
             st = self._plan.stats
@@ -1025,7 +1222,8 @@ class DiscoSolver:
                            converged=converged,
                            partition_info=(self._part.stats()
                                            if self._part else None),
-                           stream_stats=stream_stats)
+                           stream_stats=stream_stats,
+                           replan_events=list(self._replan_events))
 
 
 def disco_fit(X, y, cfg: DiscoConfig | None = None, mesh: Mesh | None = None,

@@ -638,7 +638,8 @@ def _feature_scales_update(scales, B, s):
 # ---------------------------------------------------------------------------
 
 def pcg_streamed(hvp, apply_precond, g, eps, max_iter, *, block_s=1,
-                 hvp_multi=None, basis_op=None, variant="features"):
+                 hvp_multi=None, basis_op=None, variant="features",
+                 between_rounds=None):
     """Host-driven PCG over a *streamed* Hessian operator.
 
     The in-memory loops (:func:`_pcg_loop` / :func:`_sstep_loop`) trace
@@ -666,6 +667,15 @@ def pcg_streamed(hvp, apply_precond, g, eps, max_iter, *, block_s=1,
     carried ``H p_prev``; 'samples' MGS-orthonormalizes the replicated
     basis and batches all ``s + 1`` columns. Returns :class:`PCGResult`
     with the same fields/semantics as the in-memory paths.
+
+    ``between_rounds``, when given, is called (no arguments) after each
+    completed round before the next residual check — the elastic
+    re-planning window (docs/robustness.md): the PCG state here is
+    replicated and unpermuted in both variants (global flat vectors in
+    the solve axis's canonical permuted layout), so a callback that
+    swaps the underlying stream schedule — rewiring what ``hvp``/
+    ``hvp_multi`` stream, not what they compute — leaves the recurrence
+    exact.
     """
     eps = float(eps)
     v = jnp.zeros_like(g)
@@ -692,6 +702,8 @@ def pcg_streamed(hvp, apply_precond, g, eps, max_iter, *, block_s=1,
             u = s_new + beta * u
             rs = rs_new
             t += 1
+            if between_rounds is not None:
+                between_rounds()
     else:
         if hvp_multi is None or basis_op is None:
             raise ValueError("streamed s-step PCG (block_s > 1) needs "
@@ -730,6 +742,8 @@ def pcg_streamed(hvp, apply_precond, g, eps, max_iter, *, block_s=1,
             if variant == "features":
                 scales = _feature_scales_update(scales, B, s)
             t += 1
+            if between_rounds is not None:
+                between_rounds()
 
     delta = jnp.sqrt(jnp.maximum(jnp.vdot(v, Hv), 0.0))
     r_norm = jnp.sqrt(jnp.vdot(r, r))

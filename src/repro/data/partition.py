@@ -172,7 +172,8 @@ def lpt_partition(nnz_counts, m: int, block: int = 1,
 
 
 def chunk_partition(chunk_nnz, chunk_size: int, n_items: int, m: int,
-                    strategy: str = "lpt") -> Partition:
+                    strategy: str = "lpt",
+                    chunk_cost=None) -> Partition:
     """Partition fixed-width *chunks* across ``m`` shards from nnz stats.
 
     The streaming planner's entry point: ``chunk_nnz`` comes straight
@@ -189,15 +190,52 @@ def chunk_partition(chunk_nnz, chunk_size: int, n_items: int, m: int,
     ``chunk_size`` — the equivalence that lets the streaming solver and
     the in-memory solver (``DiscoConfig.partition_block=chunk_size``)
     share one data layout.
+
+    ``chunk_cost`` (optional, ``(n_chunks,)`` nonneg ints) replaces nnz
+    as the quantity the LPT balances — the elastic re-planner passes
+    *measured* per-chunk seconds here (:mod:`repro.robust.straggler`),
+    so the new schedule levels observed runtime while ``shard_nnz``
+    still reports true per-shard nonzeros. A cost-balanced partition
+    additionally orders each shard's chunks by *descending* cost
+    instead of ascending id: the within-shard order is free (any order
+    is a valid permutation/schedule pair), and descending-cost order
+    aligns the expensive chunks of different shards into the *same*
+    schedule steps — the per-step barrier then waits on similar costs
+    instead of one straggling chunk per step (docs/robustness.md).
     """
     chunk_nnz = np.asarray(chunk_nnz, np.int64)
     n_chunks = len(chunk_nnz)
     n_chunks_padded = -(-max(n_chunks, 1) // m) * m
     block_nnz = np.zeros(n_chunks_padded, np.int64)
     block_nnz[:n_chunks] = chunk_nnz
+    if chunk_cost is not None:
+        chunk_cost = np.asarray(chunk_cost, np.int64)
+        if len(chunk_cost) != n_chunks:
+            raise ValueError(
+                f"chunk_cost has {len(chunk_cost)} entries for "
+                f"{n_chunks} chunks")
+        block_cost = np.zeros(n_chunks_padded, np.int64)
+        block_cost[:n_chunks] = chunk_cost
+    else:
+        block_cost = block_nnz
     if strategy == "lpt":
-        assign, load = _lpt_assign(block_nnz, m)
-        perm = _perm_from_assign(assign, chunk_size, m)
+        assign, _ = _lpt_assign(block_cost, m)
+        if chunk_cost is None:
+            perm = _perm_from_assign(assign, chunk_size, m)
+        else:
+            # descending-cost within-shard order (see docstring); the
+            # stable sort keeps ascending ids among equal-cost chunks
+            perm = np.empty(n_chunks_padded * chunk_size, np.int64)
+            pos = 0
+            for s in range(m):
+                blocks = np.nonzero(assign == s)[0]
+                for b in blocks[np.argsort(-block_cost[blocks],
+                                           kind="stable")]:
+                    perm[pos: pos + chunk_size] = np.arange(
+                        b * chunk_size, (b + 1) * chunk_size)
+                    pos += chunk_size
+        load = np.zeros(m, np.int64)
+        np.add.at(load, assign, block_nnz)
     elif strategy == "width":
         perm = np.arange(n_chunks_padded * chunk_size, dtype=np.int64)
         load = block_nnz.reshape(m, -1).sum(axis=1)

@@ -35,37 +35,52 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import zlib
 
 import numpy as np
 
 from repro.data.sparse import CSRMatrix, iter_libsvm_chunks
+from repro.robust.faults import ChunkCorruptionError
 
-STORE_VERSION = 1
+STORE_VERSION = 2        # v2 adds per-chunk + labels CRC32 checksums
+_COMPAT_VERSIONS = (1, 2)  # v1 stores (no checksums) still read fine
 _META = "meta.json"
 _LABELS = "labels.npy"
 _CHUNK_DIR = "chunks"
 _FIELDS = ("indptr", "indices", "data")
 
 
+def _crc(arr: np.ndarray) -> int:
+    """CRC32 of an array's canonical contiguous bytes."""
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
+
+
 @dataclasses.dataclass(frozen=True)
 class ChunkInfo:
-    """Header entry of one chunk: its index range and nonzero count."""
+    """Header entry of one chunk: its index range, nonzero count, and
+    (format v2) the CRC32 of each stored array."""
 
     index: int   # chunk id (position along the chunked axis)
     start: int   # first covered index (inclusive)
     stop: int    # last covered index (exclusive; ragged final chunk ok)
     nnz: int     # stored nonzeros — what the LPT planner balances on
+    crc: dict | None = None  # {'indptr'|'indices'|'data': crc32} (v2)
 
 
 def _chunk_path(root: str, i: int, field: str) -> str:
     return os.path.join(root, _CHUNK_DIR, f"{i:06d}.{field}.npy")
 
 
-def _write_chunk(root: str, i: int, indptr, indices, data):
-    np.save(_chunk_path(root, i, "indptr"), np.asarray(indptr, np.int64))
-    np.save(_chunk_path(root, i, "indices"),
-            np.asarray(indices, np.int32))
-    np.save(_chunk_path(root, i, "data"), np.asarray(data))
+def _write_chunk(root: str, i: int, indptr, indices, data) -> dict:
+    """Write one chunk's three arrays; return their CRC32 checksums."""
+    arrays = dict(indptr=np.asarray(indptr, np.int64),
+                  indices=np.asarray(indices, np.int32),
+                  data=np.asarray(data))
+    crcs = {}
+    for field, arr in arrays.items():
+        np.save(_chunk_path(root, i, field), arr)
+        crcs[field] = _crc(arr)
+    return crcs
 
 
 class ShardStore:
@@ -86,21 +101,28 @@ class ShardStore:
         chunks: list of :class:`ChunkInfo` (the nnz-stats header).
     """
 
-    def __init__(self, path: str):
+    def __init__(self, path: str, verify: bool = True):
         self.path = path
         with open(os.path.join(path, _META)) as f:
             meta = json.load(f)
-        if meta.get("version") != STORE_VERSION:
+        if meta.get("version") not in _COMPAT_VERSIONS:
             raise ValueError(
                 f"store {path!r} has version {meta.get('version')!r}; "
-                f"this reader supports version {STORE_VERSION}")
+                f"this reader supports versions {_COMPAT_VERSIONS}")
+        self.version: int = int(meta["version"])
+        self.verify = bool(verify)    # checksum reads (v2 headers only)
         self.axis: str = meta["axis"]
         self.shape: tuple[int, int] = tuple(meta["shape"])
         self.dtype = np.dtype(meta["dtype"])
         self.chunk_size: int = int(meta["chunk_size"])
+        self.labels_crc: int | None = (
+            int(meta["labels_crc"]) if meta.get("labels_crc") is not None
+            else None)
         self.chunks: list[ChunkInfo] = [
             ChunkInfo(index=i, start=int(c["start"]), stop=int(c["stop"]),
-                      nnz=int(c["nnz"]))
+                      nnz=int(c["nnz"]),
+                      crc=({k: int(v) for k, v in c["crc"].items()}
+                           if c.get("crc") else None))
             for i, c in enumerate(meta["chunks"])]
 
     # -- header views ------------------------------------------------------
@@ -138,25 +160,69 @@ class ShardStore:
         return total
 
     # -- chunk access ------------------------------------------------------
-    def chunk_csr(self, i: int, mmap: bool = True) -> CSRMatrix:
+    def chunk_file_path(self, i: int, field: str) -> str:
+        """Path of one stored chunk array (``field`` in
+        ``'indptr'``/``'indices'``/``'data'``) — what the fault harness
+        damages to test the checksum layer against real bytes."""
+        return _chunk_path(self.path, i, field)
+
+    def _load_field(self, i: int, field: str, mode):
+        """np.load one chunk array, converting truncation / parse
+        failures into a loud :class:`ChunkCorruptionError` that names
+        the chunk."""
+        path = _chunk_path(self.path, i, field)
+        try:
+            return np.load(path, mmap_mode=mode)
+        except (ValueError, OSError, EOFError) as e:
+            raise ChunkCorruptionError(
+                f"chunk {i} field {field!r} of store {self.path!r} is "
+                f"unreadable (truncated or damaged file {path!r}): {e}"
+            ) from e
+
+    def chunk_csr(self, i: int, mmap: bool = True,
+                  verify: bool | None = None) -> CSRMatrix:
         """CSR slab of chunk ``i``: rows are the chunked axis indices
         ``[start, stop)``, columns the full other axis. Arrays are
         memmaps when ``mmap`` (the default) — slicing them pages in only
-        the touched bytes."""
+        the touched bytes.
+
+        ``verify`` (default: the store-level ``verify`` flag) checks
+        each array against the v2 header CRC32 and raises
+        :class:`repro.robust.faults.ChunkCorruptionError` — naming the
+        chunk index and field — on any mismatch, so bit rot is caught at
+        the read site instead of surfacing as garbage PCG iterates. v1
+        stores carry no checksums; verification is skipped for them.
+        """
         info = self.chunks[i]
         mode = "r" if mmap else None
-        indptr = np.load(_chunk_path(self.path, i, "indptr"),
-                         mmap_mode=mode)
-        indices = np.load(_chunk_path(self.path, i, "indices"),
-                          mmap_mode=mode)
-        data = np.load(_chunk_path(self.path, i, "data"), mmap_mode=mode)
-        return CSRMatrix(indptr=indptr, indices=indices, data=data,
+        arrays = {f: self._load_field(i, f, mode) for f in _FIELDS}
+        if (self.verify if verify is None else verify) and info.crc:
+            for field, arr in arrays.items():
+                got = _crc(arr)
+                want = info.crc.get(field)
+                if want is not None and got != want:
+                    raise ChunkCorruptionError(
+                        f"chunk {i} field {field!r} of store "
+                        f"{self.path!r} failed its checksum "
+                        f"(crc32 {got:#010x} != header {want:#010x}) — "
+                        "the stored bytes are corrupt")
+        return CSRMatrix(indptr=arrays["indptr"],
+                         indices=arrays["indices"],
+                         data=arrays["data"],
                          shape=(info.stop - info.start, self.other_dim))
 
-    def labels(self, mmap: bool = True) -> np.ndarray:
-        """(n,) labels, memory-mapped by default."""
-        return np.load(os.path.join(self.path, _LABELS),
-                       mmap_mode="r" if mmap else None)
+    def labels(self, mmap: bool = True,
+               verify: bool | None = None) -> np.ndarray:
+        """(n,) labels, memory-mapped by default; checksum-verified
+        against the v2 header like chunk reads."""
+        y = np.load(os.path.join(self.path, _LABELS),
+                    mmap_mode="r" if mmap else None)
+        if (self.verify if verify is None else verify) \
+                and self.labels_crc is not None and _crc(y) != self.labels_crc:
+            raise ChunkCorruptionError(
+                f"labels of store {self.path!r} failed their checksum — "
+                "the stored bytes are corrupt")
+        return y
 
     def to_csr(self) -> tuple[CSRMatrix, np.ndarray]:
         """Reassemble the full feature-major ``(d, n)`` CSR + labels.
@@ -186,11 +252,15 @@ class ShardStore:
 
     # -- builders ----------------------------------------------------------
     @staticmethod
-    def _write_meta(path, axis, shape, dtype, chunk_size, chunk_infos):
+    def _write_meta(path, axis, shape, dtype, chunk_size, chunk_infos,
+                    labels_crc=None):
         meta = dict(version=STORE_VERSION, axis=axis,
                     shape=[int(shape[0]), int(shape[1])],
                     dtype=np.dtype(dtype).name, chunk_size=int(chunk_size),
-                    chunks=[dict(start=c.start, stop=c.stop, nnz=c.nnz)
+                    labels_crc=(int(labels_crc) if labels_crc is not None
+                                else None),
+                    chunks=[dict(start=c.start, stop=c.stop, nnz=c.nnz,
+                                 crc=c.crc)
                             for c in chunk_infos])
         with open(os.path.join(path, _META), "w") as f:
             json.dump(meta, f, indent=1)
@@ -221,12 +291,13 @@ class ShardStore:
         for i, start in enumerate(range(0, axis_dim, chunk_size)):
             stop = min(start + chunk_size, axis_dim)
             lo, hi = int(src.indptr[start]), int(src.indptr[stop])
-            _write_chunk(path, i, src.indptr[start:stop + 1] - lo,
-                         src.indices[lo:hi], src.data[lo:hi])
+            crcs = _write_chunk(path, i, src.indptr[start:stop + 1] - lo,
+                                src.indices[lo:hi], src.data[lo:hi])
             infos.append(ChunkInfo(index=i, start=start, stop=stop,
-                                   nnz=hi - lo))
+                                   nnz=hi - lo, crc=crcs))
         np.save(os.path.join(path, _LABELS), y)
-        cls._write_meta(path, axis, (d, n), X.dtype, chunk_size, infos)
+        cls._write_meta(path, axis, (d, n), X.dtype, chunk_size, infos,
+                        labels_crc=_crc(y))
         return cls(path)
 
     def append_chunks(self, X_new: CSRMatrix, y_new: np.ndarray
@@ -297,25 +368,25 @@ class ShardStore:
             merged_ptr = np.concatenate(
                 [np.asarray(old.indptr, np.int64),
                  np.asarray(new.indptr[1:], np.int64) + old.nnz])
-            _write_chunk(self.path, tail.index, merged_ptr,
-                         np.concatenate([np.asarray(old.indices),
-                                         np.asarray(new.indices)]),
-                         np.concatenate([np.asarray(old.data),
-                                         np.asarray(new.data)]))
+            crcs = _write_chunk(self.path, tail.index, merged_ptr,
+                                np.concatenate([np.asarray(old.indices),
+                                                np.asarray(new.indices)]),
+                                np.concatenate([np.asarray(old.data),
+                                                np.asarray(new.data)]))
             infos.append(ChunkInfo(index=tail.index, start=tail.start,
                                    stop=tail.stop + head,
-                                   nnz=old.nnz + new.nnz))
+                                   nnz=old.nnz + new.nnz, crc=crcs))
             start = tail.stop + head
             first = head
         for off in range(first, n_new, self.chunk_size):
             stop_off = min(off + self.chunk_size, n_new)
             slab = src.take_rows(np.arange(off, stop_off))
             i = len(infos)
-            _write_chunk(self.path, i, slab.indptr, slab.indices,
-                         slab.data)
+            crcs = _write_chunk(self.path, i, slab.indptr, slab.indices,
+                                slab.data)
             infos.append(ChunkInfo(index=i, start=start,
                                    stop=start + (stop_off - off),
-                                   nnz=slab.nnz))
+                                   nnz=slab.nnz, crc=crcs))
             start += stop_off - off
 
         old_y = np.asarray(self.labels(mmap=False))
@@ -323,8 +394,10 @@ class ShardStore:
         np.save(os.path.join(self.path, _LABELS), y_all)
         self.shape = (d, n + n_new)
         self.chunks = infos
+        self.labels_crc = _crc(y_all)
+        self.version = STORE_VERSION   # header rewritten at current format
         self._write_meta(self.path, self.axis, self.shape, self.dtype,
-                         self.chunk_size, infos)
+                         self.chunk_size, infos, labels_crc=self.labels_crc)
         return self
 
     @classmethod
@@ -366,9 +439,11 @@ class ShardStore:
                 max_feat = max(max_feat, int(fi.max()))
             slab = CSRMatrix.from_coo(si - start, fi, vs,
                                       (n_chunk, max_feat + 1), dtype=dtype)
-            _write_chunk(path, i, slab.indptr, slab.indices, slab.data)
+            crcs = _write_chunk(path, i, slab.indptr, slab.indices,
+                                slab.data)
             infos.append(ChunkInfo(index=i, start=start,
-                                   stop=start + n_chunk, nnz=slab.nnz))
+                                   stop=start + n_chunk, nnz=slab.nnz,
+                                   crc=crcs))
             y_parts.append(ys)
             start += n_chunk
         d = n_features if n_features is not None else max_feat + 1
@@ -376,5 +451,6 @@ class ShardStore:
         y = (np.concatenate(y_parts) if y_parts
              else np.zeros(0, dtype)).astype(dtype)
         np.save(os.path.join(path, _LABELS), y)
-        cls._write_meta(path, "samples", (d, n), dtype, chunk_size, infos)
+        cls._write_meta(path, "samples", (d, n), dtype, chunk_size, infos,
+                        labels_crc=_crc(y))
         return cls(path)

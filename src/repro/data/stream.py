@@ -32,6 +32,7 @@ import json
 import os
 import queue
 import threading
+import time
 from typing import Callable, Iterator
 
 import numpy as np
@@ -40,6 +41,9 @@ from repro.data.partition import Partition, chunk_partition
 from repro.data.sparse import (CSRMatrix, ell_from_csr, ell_tile_widths,
                                pad_csr_rows)
 from repro.data.store import ShardStore
+from repro.robust.faults import FaultInjector, TransientIOError
+from repro.robust.retry import RetryPolicy, call_with_retries
+from repro.robust.straggler import ChunkTimingLedger
 
 
 # ---------------------------------------------------------------------------
@@ -95,23 +99,68 @@ class ChunkPrefetcher:
     payloads are ever resident (queue + producer in-flight + consumer);
     ``stats`` records the realized byte high-water mark. Producer
     exceptions re-raise in the consumer.
+
+    ``retry`` (a :class:`repro.robust.retry.RetryPolicy`) hardens each
+    step's load: transient I/O failures (``OSError`` and the fault
+    harness's :class:`repro.robust.faults.TransientIOError`) are retried
+    with exponential backoff inside the producer thread, bounded by the
+    policy's per-step deadline.
+
+    A consumer that abandons a pass early (``break``, an exception, a
+    dropped iterator) must release the pipeline: call :meth:`close` —
+    or use the instance as a context manager — which cancels the
+    producer thread, drains the queue's byte ledger, and joins. A
+    generator-``finally`` alone is not enough, since an un-GC'd
+    abandoned iterator would park the producer thread forever
+    (the PR-5 leak this class now closes).
     """
 
     def __init__(self, load_fn: Callable[[int], tuple[object, int]],
                  n_steps: int, depth: int = 2,
-                 stats: PrefetchStats | None = None):
+                 stats: PrefetchStats | None = None,
+                 retry: RetryPolicy | None = None):
         self._load_fn = load_fn
         self._n_steps = int(n_steps)
         self._depth = max(int(depth), 1)
         self.stats = stats if stats is not None else PrefetchStats()
+        self._retry = retry
+        self._cancel = threading.Event()
+        self._threads: list[threading.Thread] = []
+        self._lock = threading.Lock()
+
+    def close(self):
+        """Cancel in-flight passes and join their producer threads.
+
+        Idempotent; after close the prefetcher can start fresh passes
+        again (the cancel latch is re-armed per ``__iter__``).
+        """
+        self._cancel.set()
+        with self._lock:
+            threads, self._threads = self._threads, []
+        for thread in threads:
+            thread.join(timeout=30.0)
+
+    def __enter__(self) -> "ChunkPrefetcher":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def _load_step_hardened(self, t: int) -> tuple[object, int]:
+        if self._retry is None:
+            return self._load_fn(t)
+        return call_with_retries(
+            lambda: self._load_fn(t), self._retry,
+            retryable=(TransientIOError, OSError))
 
     def __iter__(self) -> Iterator[object]:
         stats = self.stats
         with stats._lock:
             stats.passes += 1
+        self._cancel.clear()
+        cancel = self._cancel
         q: queue.Queue = queue.Queue(maxsize=self._depth)
         done = object()
-        cancel = threading.Event()
 
         def put(item) -> bool:
             # bounded put that aborts if the consumer walked away, so an
@@ -129,7 +178,7 @@ class ChunkPrefetcher:
                 for t in range(self._n_steps):
                     if cancel.is_set():
                         return
-                    payload, nbytes = self._load_fn(t)
+                    payload, nbytes = self._load_step_hardened(t)
                     stats._produced(nbytes)
                     if not put((payload, nbytes)):
                         stats._released(nbytes)
@@ -140,6 +189,8 @@ class ChunkPrefetcher:
 
         thread = threading.Thread(target=producer, daemon=True,
                                   name="repro-chunk-prefetch")
+        with self._lock:
+            self._threads.append(thread)
         thread.start()
         held = 0
         try:
@@ -166,6 +217,9 @@ class ChunkPrefetcher:
                 if isinstance(item, tuple):
                     stats._released(item[1])
             thread.join(timeout=30.0)
+            with self._lock:
+                if thread in self._threads:
+                    self._threads.remove(thread)
 
 
 # ---------------------------------------------------------------------------
@@ -198,6 +252,9 @@ class StreamPlan:
     device_put: Callable | None = None    # dict[str, np.ndarray] -> dict
     hvp_dtype: np.dtype | None = None     # HVP tile staging dtype (bf16)
     stats: PrefetchStats = dataclasses.field(default_factory=PrefetchStats)
+    timing_ledger: ChunkTimingLedger | None = None  # per-chunk seconds
+    fault_injector: FaultInjector | None = None     # test-only failure hook
+    retry: RetryPolicy | None = None      # per-step retry/backoff/deadline
 
     @property
     def n_steps(self) -> int:
@@ -237,7 +294,17 @@ class StreamPlan:
         """The requested ELL layouts of one chunk, padded to the global
         widths. 'fwd' is the layout of the local (feature-major) matrix,
         'tr' of its transpose — the :class:`repro.data.sparse.EllPair`
-        convention."""
+        convention.
+
+        Real chunks (``cid >= 0``) pass through the fault injector's
+        ``on_chunk_read`` hook (latency + transient errors, when one is
+        attached) and their measured read+build seconds feed the
+        ``timing_ledger`` — the observations the elastic re-planner
+        balances on.
+        """
+        t0 = time.monotonic()
+        if cid >= 0 and self.fault_injector is not None:
+            self.fault_injector.on_chunk_read(int(cid))
         slab = self._chunk_slab(cid)
         br, bc = self.block_rows, self.block_cols
         if self.store.axis == "samples":
@@ -249,6 +316,8 @@ class StreamPlan:
         if kind in ("tr", "both"):
             e = ell_from_csr(slab.transpose(), bc, br, width=self.w_tr)
             out["dataT"], out["colsT"] = e.data, e.cols
+        if cid >= 0 and self.timing_ledger is not None:
+            self.timing_ledger.observe(int(cid), time.monotonic() - t0)
         return out
 
     def _load_step(self, t: int, kind: str, hvp: bool = False
@@ -270,8 +339,8 @@ class StreamPlan:
         return stacked, nbytes
 
     def stream(self, kind: str = "both", hvp: bool = False
-               ) -> Iterator[dict]:
-        """Iterate the schedule's steps through the prefetch pipeline.
+               ) -> ChunkPrefetcher:
+        """One pass of the schedule through the prefetch pipeline.
 
         ``kind`` selects the layouts streamed: ``'fwd'`` (keys
         ``data``/``cols`` — drives ``X v``), ``'tr'`` (``dataT``/
@@ -280,12 +349,18 @@ class StreamPlan:
         marks a Hessian-vector-product pass: tile values are staged in
         ``hvp_dtype`` when one is set (the mixed-precision data plane —
         margins/gradient passes stay at the store dtype).
+
+        Returns the :class:`ChunkPrefetcher` itself (iterable): a
+        consumer that may stop early must ``close()`` it — or use it as
+        a context manager — so the producer thread is released. When the
+        plan carries a ``retry`` policy, each step's load is retried
+        under it inside the producer.
         """
         if kind not in ("fwd", "tr", "both"):
             raise ValueError(f"unknown stream kind {kind!r}")
-        return iter(ChunkPrefetcher(
+        return ChunkPrefetcher(
             lambda t: self._load_step(t, kind, hvp), self.n_steps,
-            depth=self.prefetch_depth, stats=self.stats))
+            depth=self.prefetch_depth, stats=self.stats, retry=self.retry)
 
 
 def _global_ell_widths(store: ShardStore, br: int, bc: int
@@ -324,11 +399,30 @@ def _global_ell_widths(store: ShardStore, br: int, bc: int
     return w_fwd, w_tr
 
 
+def _schedule_from_partition(part: Partition, chunk_size: int,
+                             n_chunks: int) -> np.ndarray:
+    """The ``(m, T)`` chunk-id schedule realizing a chunk-granular
+    partition: shard ``s``'s chunks in the partition's within-shard
+    order (ascending id for nnz plans, descending measured cost after
+    an elastic re-plan), padded ids (``>= n_chunks``) mapped to ``-1``
+    (synthetic empty chunks)."""
+    width = part.width
+    T = width // chunk_size
+    starts = (np.arange(part.m)[:, None] * width
+              + np.arange(T)[None, :] * chunk_size)
+    schedule = part.perm[starts] // chunk_size
+    return np.where(schedule < n_chunks, schedule, -1)
+
+
 def plan_streams(store: ShardStore, m: int, strategy: str = "lpt",
                  block_rows: int = 128, block_cols: int = 128,
                  prefetch_depth: int = 2,
                  device_put: Callable | None = None,
-                 hvp_dtype: np.dtype | None = None) -> StreamPlan:
+                 hvp_dtype: np.dtype | None = None,
+                 timing_ledger: ChunkTimingLedger | None = None,
+                 fault_injector: FaultInjector | None = None,
+                 retry: RetryPolicy | None = None,
+                 chunk_cost: np.ndarray | None = None) -> StreamPlan:
     """Plan a balanced streaming solve over ``store`` for ``m`` shards.
 
     Reads only the store *header* plus each chunk's index structure (to
@@ -347,6 +441,13 @@ def plan_streams(store: ShardStore, m: int, strategy: str = "lpt",
     stages the tile values of HVP passes (``stream(..., hvp=True)``) in
     that dtype — half the host→device bytes per PCG pass at bf16; a
     matching-dtype value (or None) is a no-op.
+
+    Robustness plumbing (all optional, see docs/robustness.md):
+    ``timing_ledger`` collects per-chunk measured seconds,
+    ``fault_injector`` threads a test fault plan into the read path,
+    ``retry`` hardens each step's load with bounded retries + backoff +
+    deadline, and ``chunk_cost`` balances the LPT on measured cost
+    instead of header nnz (what :func:`replan_streams` passes).
     """
     edge = block_rows if store.axis == "features" else block_cols
     if store.chunk_size % edge != 0:
@@ -354,13 +455,10 @@ def plan_streams(store: ShardStore, m: int, strategy: str = "lpt",
             f"store chunk_size {store.chunk_size} must be a multiple of "
             f"the {store.axis}-axis ELL tile edge {edge}")
     part = chunk_partition(store.chunk_nnz, store.chunk_size,
-                           store.n_items, m, strategy)
-    width = part.width
-    T = width // store.chunk_size
-    starts = (np.arange(m)[:, None] * width
-              + np.arange(T)[None, :] * store.chunk_size)
-    schedule = part.perm[starts] // store.chunk_size
-    schedule = np.where(schedule < store.n_chunks, schedule, -1)
+                           store.n_items, m, strategy,
+                           chunk_cost=chunk_cost)
+    schedule = _schedule_from_partition(part, store.chunk_size,
+                                        store.n_chunks)
 
     br, bc = block_rows, block_cols
     w_fwd, w_tr = _global_ell_widths(store, br, bc)
@@ -372,4 +470,30 @@ def plan_streams(store: ShardStore, m: int, strategy: str = "lpt",
                       block_rows=br, block_cols=bc,
                       w_fwd=w_fwd, w_tr=w_tr,
                       prefetch_depth=prefetch_depth,
-                      device_put=device_put, hvp_dtype=hvp_dtype)
+                      device_put=device_put, hvp_dtype=hvp_dtype,
+                      timing_ledger=timing_ledger,
+                      fault_injector=fault_injector, retry=retry)
+
+
+def replan_streams(plan: StreamPlan,
+                   chunk_cost: np.ndarray) -> StreamPlan:
+    """Re-balance an existing plan on *measured* per-chunk costs.
+
+    The elastic re-planner's workhorse
+    (:meth:`repro.robust.straggler.ElasticReplanner.maybe_replan`):
+    re-runs the chunk-granular LPT with ``chunk_cost`` (nonneg ints,
+    e.g. nanoseconds from the timing ledger) as the balance quantity and
+    returns a new :class:`StreamPlan` with the new partition and
+    schedule. Everything else — store, ELL widths, byte/timing ledgers,
+    fault injector, retry policy, staging config — is carried over, so
+    streams from the new plan are drop-in continuations of the old one.
+    No chunk data moves: chunks live in the store; only the
+    chunk→shard membership (and the matching index permutation)
+    changes.
+    """
+    part = chunk_partition(plan.store.chunk_nnz, plan.chunk_size,
+                           plan.store.n_items, plan.m, "lpt",
+                           chunk_cost=chunk_cost)
+    schedule = _schedule_from_partition(part, plan.chunk_size,
+                                        plan.store.n_chunks)
+    return dataclasses.replace(plan, partition=part, schedule=schedule)

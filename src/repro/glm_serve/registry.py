@@ -45,6 +45,8 @@ import numpy as np
 
 from repro.core.comm import CommLedger
 from repro.core.disco import DiscoConfig, DiscoResult
+from repro.robust.checkpoint import fsync_dir, fsync_file
+from repro.robust.faults import crashpoint
 
 REGISTRY_VERSION = 1
 _VERSIONS = "versions"
@@ -87,8 +89,14 @@ class ModelRegistry:
         old = reg.load(version=v - 1)     # any retained version
     """
 
-    def __init__(self, path: str):
+    def __init__(self, path: str, fault_injector=None):
         self.path = path
+        # test-only crash windows (repro.robust.faults.FaultInjector):
+        # "publish:staged" fires after the snapshot is staged+fsync'd but
+        # before the rename; "activate:staged" after the pointer temp is
+        # written but before os.replace. Production passes None and pays
+        # nothing.
+        self._faults = fault_injector
         os.makedirs(os.path.join(path, _VERSIONS), exist_ok=True)
 
     # -- version listing ---------------------------------------------------
@@ -115,12 +123,22 @@ class ModelRegistry:
 
         The snapshot is staged under ``versions/.tmp-<ver>`` and renamed
         into place only when fully written, so concurrent readers never
-        observe a partial version. Returns the new version id.
+        observe a partial version. Every staged file and the staged
+        directory are fsync'd *before* the rename, and the parent after
+        it — so the atomicity holds across power loss, not just process
+        death: a crash at any instant leaves either no new version or a
+        fully-durable one (the crash-window tests in
+        ``tests/test_robust.py`` drive every boundary). Returns the new
+        version id.
         """
         vs = self.versions()
         version = (vs[-1] + 1) if vs else 1
         final = _vdir(self.path, version)
-        tmp = os.path.join(self.path, _VERSIONS, f".tmp-{version:06d}")
+        versions_dir = os.path.join(self.path, _VERSIONS)
+        tmp = os.path.join(versions_dir, f".tmp-{version:06d}")
+        if os.path.isdir(tmp):            # leftover stage from a crash
+            import shutil
+            shutil.rmtree(tmp)
         os.makedirs(tmp)
         np.save(os.path.join(tmp, _WEIGHTS), np.asarray(result.w))
         header = dict(
@@ -134,23 +152,41 @@ class ModelRegistry:
                         spmd_collectives=result.ledger.spmd_collectives),
             partition_info=result.partition_info,
             stream_stats=result.stream_stats,
+            replan_events=list(result.replan_events),
         )
         with open(os.path.join(tmp, _MODEL), "w") as f:
             json.dump(header, f, indent=1, default=float)
+            f.flush()
+            os.fsync(f.fileno())
+        fsync_file(os.path.join(tmp, _WEIGHTS))
+        fsync_dir(tmp)
+        crashpoint(self._faults, "publish:staged")
         os.rename(tmp, final)
+        fsync_dir(versions_dir)
+        crashpoint(self._faults, "publish:renamed")
         if activate:
             self.activate(version)
         return version
 
     def activate(self, version: int):
-        """Atomically point ACTIVE at an existing version (hot swap)."""
+        """Atomically point ACTIVE at an existing version (hot swap).
+
+        The pointer temp is fsync'd before the ``os.replace`` and the
+        registry directory after it, so the flip is durable — a crash
+        leaves ACTIVE naming either the old or the new version, never a
+        torn or lost pointer.
+        """
         if not os.path.isdir(_vdir(self.path, version)):
             raise ValueError(f"no published version {version} in "
                              f"{self.path!r}")
         tmp = os.path.join(self.path, f".{_ACTIVE}.tmp")
         with open(tmp, "w") as f:
             f.write(f"{version}\n")
+            f.flush()
+            os.fsync(f.fileno())
+        crashpoint(self._faults, "activate:staged")
         os.replace(tmp, os.path.join(self.path, _ACTIVE))
+        fsync_dir(self.path)
 
     # -- load --------------------------------------------------------------
     def load(self, version: int | None = None) -> PublishedModel:
@@ -185,6 +221,7 @@ class ModelRegistry:
                               spmd_collectives=int(led["spmd_collectives"])),
             converged=bool(header["converged"]),
             partition_info=header["partition_info"],
-            stream_stats=header["stream_stats"])
+            stream_stats=header["stream_stats"],
+            replan_events=list(header.get("replan_events", [])))
         return PublishedModel(version=int(version), w=w, cfg=cfg,
                               result=result)

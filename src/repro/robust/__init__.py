@@ -1,0 +1,47 @@
+"""Robustness layer: fault injection, retrying I/O, elastic re-planning,
+and checkpoint/resume (docs/robustness.md).
+
+The paper's load-balancing argument assumes the world observed at
+planning time holds for the whole solve; this package is what happens
+when it does not. Four pieces, each usable on its own:
+
+* :mod:`repro.robust.faults` — a deterministic, seedable fault-injection
+  harness (:class:`FaultPlan` / :class:`FaultInjector`): transient chunk
+  read errors, injected per-chunk latency (stragglers), crash points,
+  and kill-at-step / kill-after-N-reads, threadable into
+  :class:`repro.data.stream.ChunkPrefetcher`,
+  :class:`repro.data.store.ShardStore` reads, the model registry, and
+  the 4-device subprocess tests.
+* :mod:`repro.robust.retry` — :class:`RetryPolicy`: bounded retries with
+  exponential backoff and a per-step deadline, driving the hardened
+  prefetch pipeline.
+* :mod:`repro.robust.straggler` — :class:`ChunkTimingLedger` (per-chunk
+  observed load/build seconds) and :class:`ElasticReplanner`, which
+  re-runs the chunk-granular LPT on *measured* per-chunk cost when the
+  observed shard imbalance exceeds a threshold — shards move without
+  touching data, the solve continues from the replicated state.
+* :mod:`repro.robust.checkpoint` — atomic (fsync + rename) outer-loop
+  checkpoints of a damped-Newton solve, the persistence half of
+  ``DiscoSolver.fit(resume=...)``.
+"""
+from repro.robust.faults import (ChunkCorruptionError, ChunkReadError,
+                                 FaultInjector, FaultPlan, SimulatedCrash,
+                                 SimulatedKill, TransientIOError,
+                                 corrupt_chunk_file, truncate_chunk_file)
+from repro.robust.retry import (RetryPolicy, StepDeadlineExceeded,
+                                call_with_retries)
+from repro.robust.straggler import (ChunkTimingLedger, ElasticReplanner,
+                                    ReplanEvent, barrier_seconds)
+from repro.robust.checkpoint import (CheckpointState, latest_checkpoint,
+                                     load_checkpoint, save_checkpoint)
+
+__all__ = [
+    "ChunkCorruptionError", "ChunkReadError", "FaultInjector", "FaultPlan",
+    "SimulatedCrash", "SimulatedKill", "TransientIOError",
+    "corrupt_chunk_file", "truncate_chunk_file",
+    "RetryPolicy", "StepDeadlineExceeded", "call_with_retries",
+    "ChunkTimingLedger", "ElasticReplanner", "ReplanEvent",
+    "barrier_seconds",
+    "CheckpointState", "latest_checkpoint", "load_checkpoint",
+    "save_checkpoint",
+]

@@ -1,0 +1,186 @@
+"""Atomic outer-loop checkpoints: kill a solve, resume it bit-for-bit.
+
+A damped-Newton solve's durable state is tiny — the iterate ``w``, the
+RNG key, the per-iteration history and communication ledger — because
+the data plane is re-derivable from the store and the PCG state is
+rebuilt every outer iteration. This module persists exactly that state
+with the registry's atomic-publish idiom, hardened with fsync:
+
+::
+
+    ckpt/
+      it-00000003/          one complete outer-iteration snapshot
+        state.json          header: format version, next_iter, key,
+                            history, ledger, replan events, cfg
+        w.npy               iterate, byte-exact, ORIGINAL feature order
+      it-00000004/ ...
+      LATEST                text pointer to the newest complete snapshot
+
+Write protocol (crash-safe at every boundary): stage under a dot-prefix
+temp dir -> fsync every file -> fsync the staged dir -> rename into
+place -> fsync the parent -> rewrite ``LATEST`` via temp + fsync +
+``os.replace``. A reader (``load_checkpoint``) only ever follows
+``LATEST``, which only ever names a fully-durable snapshot — a crash at
+any instant leaves either the old state or the new, never a torn one.
+
+``w`` is stored in the *original* feature order (any load-balancing
+permutation undone), so a resumed solve may re-plan its shards freely —
+including resuming onto a different mesh size or after an elastic
+re-plan — and still continue the exact trajectory.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+CHECKPOINT_VERSION = 1
+_STATE = "state.json"
+_W = "w.npy"
+_LATEST = "LATEST"
+_KEEP = 2          # retained snapshots (latest + one safety margin)
+
+
+def fsync_file(path: str):
+    """fsync one file's contents to stable storage."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def fsync_dir(path: str):
+    """fsync a directory entry (makes renames/creates inside durable)."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+@dataclasses.dataclass
+class CheckpointState:
+    """Everything ``DiscoSolver.fit(resume=...)`` needs to continue.
+
+    Attributes:
+        next_iter: the outer iteration the resumed loop starts at.
+        w: (d,) iterate in original feature order.
+        key: PRNG key data (uint32 array) as of the start of
+            ``next_iter`` — resumed draws match the uninterrupted run.
+        history: per-iteration stats dicts accumulated so far.
+        ledger: communication totals so far
+            (``rounds``/``floats``/``spmd_collectives``).
+        replan_events: elastic re-plan records so far (plain dicts).
+        cfg: the solve's ``DiscoConfig`` as a dict — resume refuses a
+            mismatched config instead of silently blending two solves.
+    """
+
+    next_iter: int
+    w: np.ndarray
+    key: np.ndarray
+    history: list[dict]
+    ledger: dict
+    replan_events: list[dict]
+    cfg: dict
+
+
+def _snap_dir(path: str, it: int) -> str:
+    return os.path.join(path, f"it-{it:08d}")
+
+
+def save_checkpoint(path: str, state: CheckpointState) -> str:
+    """Durably persist ``state`` under ``path``; returns the snapshot dir.
+
+    Atomic and fsync'd at every step (see the module docstring's write
+    protocol); older snapshots beyond the newest ``2`` are pruned.
+    """
+    os.makedirs(path, exist_ok=True)
+    it = int(state.next_iter)
+    tmp = os.path.join(path, f".tmp-it-{it:08d}")
+    if os.path.isdir(tmp):                     # leftover from a crash
+        import shutil
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    np.save(os.path.join(tmp, _W), np.asarray(state.w))
+    header = dict(
+        format_version=CHECKPOINT_VERSION,
+        next_iter=it,
+        key=[int(v) for v in np.asarray(state.key).ravel()],
+        key_dtype=str(np.asarray(state.key).dtype),
+        history=state.history,
+        ledger=dict(state.ledger),
+        replan_events=list(state.replan_events),
+        cfg=dict(state.cfg),
+    )
+    with open(os.path.join(tmp, _STATE), "w") as f:
+        json.dump(header, f, indent=1, default=float)
+        f.flush()
+        os.fsync(f.fileno())
+    fsync_file(os.path.join(tmp, _W))
+    fsync_dir(tmp)
+    final = _snap_dir(path, it)
+    if os.path.isdir(final):                   # re-save of same iter
+        import shutil
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    fsync_dir(path)
+
+    ptr_tmp = os.path.join(path, f".{_LATEST}.tmp")
+    with open(ptr_tmp, "w") as f:
+        f.write(f"{it}\n")
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(ptr_tmp, os.path.join(path, _LATEST))
+    fsync_dir(path)
+
+    for old in sorted(_snapshots(path))[:-_KEEP]:
+        import shutil
+        shutil.rmtree(_snap_dir(path, old), ignore_errors=True)
+    return final
+
+
+def _snapshots(path: str) -> list[int]:
+    out = []
+    try:
+        names = os.listdir(path)
+    except FileNotFoundError:
+        return out
+    for name in names:
+        if name.startswith("it-") and name[3:].isdigit():
+            out.append(int(name[3:]))
+    return out
+
+
+def latest_checkpoint(path: str) -> int | None:
+    """``next_iter`` of the newest complete snapshot, or None."""
+    try:
+        with open(os.path.join(path, _LATEST)) as f:
+            return int(f.read().strip())
+    except (FileNotFoundError, ValueError):
+        return None
+
+
+def load_checkpoint(path: str) -> CheckpointState | None:
+    """Load the snapshot ``LATEST`` points at; None when there is none."""
+    it = latest_checkpoint(path)
+    if it is None:
+        return None
+    snap = _snap_dir(path, it)
+    with open(os.path.join(snap, _STATE)) as f:
+        header = json.load(f)
+    if header.get("format_version") != CHECKPOINT_VERSION:
+        raise ValueError(
+            f"checkpoint {snap!r} has format "
+            f"{header.get('format_version')!r}; this reader supports "
+            f"format {CHECKPOINT_VERSION}")
+    w = np.load(os.path.join(snap, _W))
+    key = np.asarray(header["key"],
+                     np.dtype(header.get("key_dtype", "uint32")))
+    return CheckpointState(
+        next_iter=int(header["next_iter"]), w=w, key=key,
+        history=list(header["history"]), ledger=dict(header["ledger"]),
+        replan_events=list(header.get("replan_events", [])),
+        cfg=dict(header["cfg"]))

@@ -1,0 +1,84 @@
+"""Bounded-retry policy with exponential backoff and a per-step deadline.
+
+The streaming data plane (:mod:`repro.data.stream`) reads every chunk of
+a huge dataset many times per solve; at that volume transient I/O errors
+are a *when*, not an *if*. This module is the policy half of the
+hardened pipeline: a retryable step is attempted up to ``max_retries + 1``
+times with exponentially growing sleeps between attempts, and the whole
+step — sleeps included — must finish inside ``deadline_s`` or the error
+is escalated instead of retried forever (a hung disk must surface as a
+loud failure, not a silent stall).
+
+Only *transient* errors are retried (``OSError`` and the fault
+harness's :class:`repro.robust.faults.TransientIOError`); everything
+else — checksum mismatches, simulated kills, programming errors —
+propagates immediately.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+
+class StepDeadlineExceeded(RuntimeError):
+    """A retried step ran out of its wall-clock budget (hung I/O)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Retry/backoff/deadline knobs of one retryable step.
+
+    Attributes:
+        max_retries: additional attempts after the first failure
+            (0 disables retrying — the first error propagates).
+        backoff_s: sleep before the first retry.
+        backoff_factor: multiplier applied to the sleep per retry
+            (exponential backoff).
+        deadline_s: wall-clock budget for the step across all attempts
+            and sleeps; ``0`` means no deadline. Exceeding it raises
+            :class:`StepDeadlineExceeded` chained to the last error.
+        sleep: injectable sleep function (tests pass a recorder so the
+            backoff schedule is asserted without real waiting).
+    """
+
+    max_retries: int = 3
+    backoff_s: float = 0.05
+    backoff_factor: float = 2.0
+    deadline_s: float = 0.0
+    sleep: Callable[[float], None] = time.sleep
+
+    def backoff_schedule(self) -> list[float]:
+        """The sleeps (seconds) between successive attempts."""
+        return [self.backoff_s * self.backoff_factor ** i
+                for i in range(self.max_retries)]
+
+
+def call_with_retries(fn: Callable[[], object], policy: RetryPolicy,
+                      *, retryable: tuple[type[BaseException], ...]
+                      = (OSError,), clock: Callable[[], float]
+                      = time.monotonic):
+    """Run ``fn()`` under ``policy``; return its result.
+
+    Retries only exceptions in ``retryable`` (callers add the fault
+    harness's :class:`repro.robust.faults.TransientIOError`). Raises the
+    last error once retries are exhausted, or
+    :class:`StepDeadlineExceeded` (chained to the last error, if any)
+    once ``policy.deadline_s`` is spent — whichever comes first.
+    """
+    start = clock()
+    last: BaseException | None = None
+    for attempt in range(policy.max_retries + 1):
+        if policy.deadline_s > 0 and clock() - start > policy.deadline_s:
+            raise StepDeadlineExceeded(
+                f"step exceeded its {policy.deadline_s:.3g}s deadline "
+                f"after {attempt} attempt(s)") from last
+        try:
+            return fn()
+        except retryable as e:
+            last = e
+            if attempt >= policy.max_retries:
+                raise
+            policy.sleep(policy.backoff_s
+                         * policy.backoff_factor ** attempt)
+    raise last  # unreachable; keeps type checkers honest

@@ -1,0 +1,664 @@
+"""Robustness layer (repro.robust): deterministic fault injection,
+retry/backoff/deadline, prefetcher lifecycle, straggler re-planning,
+checkpoint/resume, and the registry's crash windows.
+
+The 4-device kill-and-resume and elastic-replan tests run in
+subprocesses (device count must be forced before jax initializes), same
+idiom as tests/test_streaming.py.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+import threading
+
+import numpy as np
+import pytest
+
+from repro.robust.checkpoint import (CheckpointState, latest_checkpoint,
+                                     load_checkpoint, save_checkpoint)
+from repro.robust.faults import (ChunkReadError, FaultInjector, FaultPlan,
+                                 SimulatedCrash, SimulatedKill)
+from repro.robust.retry import (RetryPolicy, StepDeadlineExceeded,
+                                call_with_retries)
+from repro.robust.straggler import (ChunkTimingLedger, ElasticReplanner,
+                                    barrier_seconds)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+@pytest.fixture()
+def ref_mode(monkeypatch):
+    # streamed chunks apply kernels eagerly; interpret-mode emulation is
+    # needlessly slow for these shapes
+    monkeypatch.setenv("REPRO_KERNEL_MODE", "ref")
+
+
+# ---------------------------------------------------------------------------
+# retry policy
+# ---------------------------------------------------------------------------
+
+def test_retry_backoff_schedule():
+    """Two failures then success: the recorded sleeps are exactly the
+    exponential schedule and the step returns its value."""
+    sleeps = []
+    policy = RetryPolicy(max_retries=3, backoff_s=0.05, backoff_factor=2.0,
+                         sleep=sleeps.append)
+    calls = [0]
+
+    def flaky():
+        calls[0] += 1
+        if calls[0] <= 2:
+            raise ChunkReadError("boom")
+        return "ok"
+
+    assert call_with_retries(flaky, policy,
+                             retryable=(ChunkReadError,)) == "ok"
+    assert calls[0] == 3
+    assert sleeps == [0.05, 0.1]
+    assert policy.backoff_schedule() == [0.05, 0.1, 0.2]
+
+
+def test_retry_exhaustion_raises_last_error():
+    sleeps = []
+    policy = RetryPolicy(max_retries=2, backoff_s=0.01, sleep=sleeps.append)
+    calls = [0]
+
+    def always_fails():
+        calls[0] += 1
+        raise ChunkReadError(f"attempt {calls[0]}")
+
+    with pytest.raises(ChunkReadError, match="attempt 3"):
+        call_with_retries(always_fails, policy, retryable=(ChunkReadError,))
+    assert calls[0] == 3 and len(sleeps) == 2
+
+
+def test_retry_deadline_escalates():
+    """A hung step surfaces as StepDeadlineExceeded (chained to the last
+    transient error), never an unbounded retry loop."""
+    clock = [0.0]
+    policy = RetryPolicy(max_retries=100, backoff_s=0.0, deadline_s=1.0,
+                         sleep=lambda s: None)
+
+    def tick():
+        clock[0] += 0.4
+        raise ChunkReadError("still down")
+
+    with pytest.raises(StepDeadlineExceeded, match="deadline"):
+        call_with_retries(tick, policy, retryable=(ChunkReadError,),
+                          clock=lambda: clock[0])
+
+
+def test_retry_does_not_swallow_non_retryable():
+    policy = RetryPolicy(max_retries=5, sleep=lambda s: None)
+    calls = [0]
+
+    def broken():
+        calls[0] += 1
+        raise ValueError("programming error")
+
+    with pytest.raises(ValueError):
+        call_with_retries(broken, policy, retryable=(ChunkReadError,))
+    assert calls[0] == 1
+
+
+# ---------------------------------------------------------------------------
+# fault plans / injector
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_rate_is_deterministic():
+    """The faulty-chunk set is a pure function of (seed, cid) — two
+    injectors built from equal plans replay identically."""
+    a = FaultPlan(seed=7, read_error_rate=0.5)
+    b = FaultPlan(seed=7, read_error_rate=0.5)
+    faulty = [cid for cid in range(64) if a.chunk_is_faulty(cid)]
+    assert faulty == [cid for cid in range(64) if b.chunk_is_faulty(cid)]
+    assert 0 < len(faulty) < 64
+    c = FaultPlan(seed=8, read_error_rate=0.5)
+    assert faulty != [cid for cid in range(64) if c.chunk_is_faulty(cid)]
+
+
+def test_fault_injector_rearms_after_success():
+    """read_error_attempts failures per pass, then a success, then the
+    counter re-arms — every pass over the data exercises the retries."""
+    inj = FaultInjector(FaultPlan(fail_chunks=frozenset({3}),
+                                  read_error_attempts=2),
+                        sleep=lambda s: None)
+    for _ in range(2):                       # two full passes
+        for _ in range(2):
+            with pytest.raises(ChunkReadError):
+                inj.on_chunk_read(3)
+        inj.on_chunk_read(3)                 # third read succeeds
+        inj.on_chunk_read(0)                 # clean chunk never fails
+    assert inj.faults_injected == 4
+    assert inj.reads == 4                    # only completed reads count
+
+
+def test_fault_injector_latency_and_kill():
+    slept = []
+    inj = FaultInjector(FaultPlan(slow_chunks={5: 0.25},
+                                  kill_after_reads=3),
+                        sleep=slept.append)
+    inj.on_chunk_read(5)
+    assert slept == [0.25]
+    inj.on_chunk_read(0)
+    with pytest.raises(SimulatedKill):
+        inj.on_chunk_read(1)
+    inj2 = FaultInjector(FaultPlan(kill_at_step=2))
+    inj2.on_outer_step(0)
+    inj2.on_outer_step(1)
+    with pytest.raises(SimulatedKill):
+        inj2.on_outer_step(2)
+
+
+# ---------------------------------------------------------------------------
+# prefetcher lifecycle (the PR-5 abandoned-pass leak, now closed)
+# ---------------------------------------------------------------------------
+
+def _prefetch_threads():
+    return [t for t in threading.enumerate()
+            if t.name == "repro-chunk-prefetch" and t.is_alive()]
+
+
+def test_prefetcher_close_releases_abandoned_pass():
+    """A consumer that stops mid-pass and calls close() leaves no
+    producer thread behind; the prefetcher re-arms for a fresh pass."""
+    from repro.data.stream import ChunkPrefetcher
+
+    pf = ChunkPrefetcher(lambda t: (t, 10), n_steps=200, depth=1)
+    it = iter(pf)
+    assert next(it) == 0
+    assert len(_prefetch_threads()) >= 1     # producer parked on the queue
+    pf.close()
+    assert _prefetch_threads() == []
+    del it                                   # finalize the dead iterator
+    # close() re-arms: a fresh full pass completes and cleans up
+    assert list(pf) == list(range(200))
+    assert _prefetch_threads() == []
+    assert pf.stats.live_bytes == 0
+
+
+def test_prefetcher_context_manager_closes(tmp_path):
+    """plan.stream() used as a context manager releases the pipeline
+    even when the consumer breaks out after one step."""
+    from repro.data.sparse import make_sparse_glm_data
+    from repro.data.store import ShardStore
+    from repro.data.stream import plan_streams
+
+    X, y, _ = make_sparse_glm_data(d=64, n=48, density=0.15, seed=1)
+    store = ShardStore.from_csr(X, y, str(tmp_path / "s"), axis="features",
+                                chunk_size=8)
+    plan = plan_streams(store, m=4, block_rows=4, block_cols=4)
+    with plan.stream("fwd") as pf:
+        for _ in pf:
+            break                            # abandon the pass early
+    assert _prefetch_threads() == []
+    assert plan.stats.live_bytes == 0
+
+
+def test_prefetcher_retries_transient_loads():
+    """A retry policy on the prefetcher recovers injected transient
+    errors inside the producer thread."""
+    from repro.data.stream import ChunkPrefetcher
+
+    inj = FaultInjector(FaultPlan(fail_chunks=frozenset({1, 3}),
+                                  read_error_attempts=1),
+                        sleep=lambda s: None)
+
+    def load(t):
+        inj.on_chunk_read(t)
+        return t, 1
+
+    policy = RetryPolicy(max_retries=2, backoff_s=0.0,
+                         sleep=lambda s: None)
+    got = list(ChunkPrefetcher(load, n_steps=5, depth=2, retry=policy))
+    assert got == list(range(5))
+    assert inj.faults_injected == 2
+
+    # without a policy the transient error surfaces to the consumer
+    inj2 = FaultInjector(FaultPlan(fail_chunks=frozenset({1}),
+                                   read_error_attempts=1),
+                         sleep=lambda s: None)
+
+    def load2(t):
+        inj2.on_chunk_read(t)
+        return t, 1
+
+    with pytest.raises(ChunkReadError):
+        list(ChunkPrefetcher(load2, n_steps=5, depth=2))
+
+
+# ---------------------------------------------------------------------------
+# timing ledger + elastic replanner (plan level, no solver)
+# ---------------------------------------------------------------------------
+
+def test_barrier_seconds_hand_case():
+    sched = np.array([[0, 1], [2, -1]])
+    cs = np.array([1.0, 2.0, 5.0])
+    # step 0: max(1, 5) = 5 ; step 1: max(2, pad 0) = 2
+    assert barrier_seconds(sched, cs) == pytest.approx(7.0)
+
+
+def test_timing_ledger_ewma_and_median_fill():
+    led = ChunkTimingLedger(4, alpha=0.5)
+    led.observe(0, 1.0)
+    led.observe(0, 3.0)                      # ewma: 1 + 0.5*(3-1) = 2
+    led.observe(1, 8.0)
+    assert led.n_observed == 2 and not led.complete()
+    cs = led.chunk_seconds()
+    assert cs[0] == pytest.approx(2.0)
+    assert cs[1] == pytest.approx(8.0)
+    # unseen chunks filled with the observed median
+    assert cs[2] == cs[3] == pytest.approx(5.0)
+    sched = np.array([[0, 1], [2, 3]])
+    assert led.observed_straggler(sched) == pytest.approx(10.0 / 10.0)
+    led.reset()
+    assert led.n_observed == 0
+
+
+def _plan_with_ledger(tmp_path, m=4, chunk=8):
+    from repro.data.sparse import make_sparse_glm_data
+    from repro.data.store import ShardStore
+    from repro.data.stream import plan_streams
+
+    X, y, _ = make_sparse_glm_data(d=128, n=48, density=0.15, alpha=1.2,
+                                   seed=2)
+    store = ShardStore.from_csr(X, y, str(tmp_path / "s"), axis="features",
+                                chunk_size=chunk)
+    return plan_streams(store, m=m, block_rows=4, block_cols=4), store
+
+
+def test_replanner_fires_moves_chunks_and_cools_down(tmp_path):
+    """Skewed observations on one shard's chunks trip the threshold; the
+    re-plan levels the modeled barrier, and the cooldown blocks an
+    immediate second fire until every chunk is re-observed."""
+    plan, store = _plan_with_ledger(tmp_path)
+    led = ChunkTimingLedger(store.n_chunks)
+    slow = set(int(c) for c in plan.schedule[0] if c >= 0)
+    for cid in range(store.n_chunks):
+        led.observe(cid, 0.10 if cid in slow else 0.01)
+    rp = ElasticReplanner(led, threshold=1.5, min_gain=1.05)
+    out = rp.maybe_replan(plan, outer_iter=3, trigger="pcg")
+    assert out is not None
+    new_plan, event = out
+    assert event.moved_chunks > 0
+    assert event.outer_iter == 3 and event.trigger == "pcg"
+    assert event.observed_straggler >= 1.5
+    assert event.barrier_s_after < event.barrier_s_before
+    assert event.planned_straggler < event.observed_straggler
+    # the new schedule still covers every chunk exactly once
+    real = new_plan.schedule[new_plan.schedule >= 0]
+    np.testing.assert_array_equal(np.sort(real), np.arange(store.n_chunks))
+    # nnz bookkeeping survives: same total nonzeros, true per-shard nnz
+    assert new_plan.partition.shard_nnz.sum() == store.nnz
+    # cooldown: no second fire before every chunk is observed again
+    assert rp.maybe_replan(new_plan) is None
+    assert rp.events == [event]
+
+
+def test_replanner_quiet_below_threshold(tmp_path):
+    plan, store = _plan_with_ledger(tmp_path)
+    led = ChunkTimingLedger(store.n_chunks)
+    for cid in range(store.n_chunks):
+        led.observe(cid, 0.01)               # perfectly balanced
+    rp = ElasticReplanner(led, threshold=1.5)
+    assert rp.maybe_replan(plan) is None
+    # and an incomplete ledger never fires
+    led2 = ChunkTimingLedger(store.n_chunks)
+    led2.observe(0, 10.0)
+    assert ElasticReplanner(led2, threshold=1.0).maybe_replan(plan) is None
+
+
+def test_replan_aligns_expensive_chunks(tmp_path):
+    """Cost-balanced re-plans order each shard's chunks by descending
+    cost, aligning stragglers into the same steps: with one shard's
+    chunks 6x slower, the modeled barrier recovers by >= 2x."""
+    from repro.data.stream import replan_streams
+
+    plan, store = _plan_with_ledger(tmp_path)
+    cs = np.full(store.n_chunks, 0.01)
+    cs[[int(c) for c in plan.schedule[0] if c >= 0]] = 0.06
+    new = replan_streams(plan, chunk_cost=(cs * 1e9).astype(np.int64))
+    for s in range(new.m):
+        row = [c for c in new.schedule[s] if c >= 0]
+        assert list(cs[row]) == sorted(cs[row], reverse=True)
+    before = barrier_seconds(plan.schedule, cs)
+    after = barrier_seconds(new.schedule, cs)
+    assert before / after >= 2.0
+
+
+# ---------------------------------------------------------------------------
+# checkpoints
+# ---------------------------------------------------------------------------
+
+def _ckpt_state(it, d=5, seed=0):
+    rng = np.random.default_rng(seed + it)
+    return CheckpointState(
+        next_iter=it, w=rng.standard_normal(d).astype(np.float32),
+        key=np.array([1, it], np.uint32),
+        history=[{"grad_norm": 0.5 / (j + 1)} for j in range(it)],
+        ledger=dict(rounds=2 * it, floats=10 * it, spmd_collectives=2 * it),
+        replan_events=[{"outer_iter": 0}] if it > 1 else [],
+        cfg={"lam": 0.01, "partition": "samples"})
+
+
+def test_checkpoint_roundtrip_and_prune(tmp_path):
+    """Save/load round-trips every field; LATEST tracks the newest
+    snapshot; snapshots beyond the newest two are pruned."""
+    path = str(tmp_path / "ckpt")
+    for it in (1, 2, 3):
+        save_checkpoint(path, _ckpt_state(it))
+    assert latest_checkpoint(path) == 3
+    got = load_checkpoint(path)
+    want = _ckpt_state(3)
+    np.testing.assert_array_equal(got.w, want.w)
+    np.testing.assert_array_equal(got.key, want.key)
+    assert got.key.dtype == np.uint32
+    assert got.next_iter == 3
+    assert got.history == want.history
+    assert got.ledger == want.ledger
+    assert got.replan_events == want.replan_events
+    assert got.cfg == want.cfg
+    kept = sorted(n for n in os.listdir(path) if n.startswith("it-"))
+    assert kept == ["it-00000002", "it-00000003"]
+
+
+def test_checkpoint_empty_and_stale_tmp(tmp_path):
+    path = str(tmp_path / "ckpt")
+    assert load_checkpoint(path) is None
+    os.makedirs(os.path.join(path, ".tmp-it-00000001"))  # crash leftover
+    save_checkpoint(path, _ckpt_state(1))
+    assert load_checkpoint(path).next_iter == 1
+
+
+# ---------------------------------------------------------------------------
+# registry crash windows (satellite: fsync + atomic publish under faults)
+# ---------------------------------------------------------------------------
+
+def _registry_fixture(tmp_path, fault_injector=None):
+    from repro.core.comm import CommLedger
+    from repro.core.disco import DiscoConfig, DiscoResult
+    from repro.glm_serve.registry import ModelRegistry
+
+    result = DiscoResult(w=np.arange(6, dtype=np.float32),
+                         history=[{"grad_norm": 0.1}],
+                         ledger=CommLedger(rounds=3, floats=30,
+                                           spmd_collectives=3),
+                         converged=True)
+    reg = ModelRegistry(str(tmp_path / "reg"),
+                        fault_injector=fault_injector)
+    return reg, result, DiscoConfig(lam=0.01)
+
+
+def test_registry_crash_before_publish_rename(tmp_path):
+    """Death after staging but before the rename leaves no new version —
+    and a later publish of the same id succeeds over the debris."""
+    inj = FaultInjector(FaultPlan(crash_at=frozenset({"publish:staged"})))
+    reg, result, cfg = _registry_fixture(tmp_path, fault_injector=inj)
+    with pytest.raises(SimulatedCrash):
+        reg.publish(result, cfg)
+    assert reg.versions() == []
+    assert reg.active_version() is None
+    # recovery: a fresh (fault-free) registry on the same dir publishes
+    from repro.glm_serve.registry import ModelRegistry
+    reg2 = ModelRegistry(reg.path)
+    v = reg2.publish(result, cfg)
+    assert reg2.versions() == [v] and reg2.active_version() == v
+    np.testing.assert_array_equal(reg2.load().w, result.w)
+
+
+def test_registry_crash_between_rename_and_activate(tmp_path):
+    """Death after the rename: the version is durably published but
+    ACTIVE still names the old one — never a torn pointer."""
+    from repro.glm_serve.registry import ModelRegistry
+
+    reg, result, cfg = _registry_fixture(tmp_path)
+    v1 = reg.publish(result, cfg)
+    inj = FaultInjector(FaultPlan(crash_at=frozenset({"publish:renamed"})))
+    reg_f = ModelRegistry(reg.path, fault_injector=inj)
+    with pytest.raises(SimulatedCrash):
+        reg_f.publish(result, cfg)
+    reg3 = ModelRegistry(reg.path)
+    assert reg3.versions() == [v1, v1 + 1]   # snapshot survived...
+    assert reg3.active_version() == v1       # ...but the flip never ran
+    reg3.activate(v1 + 1)                    # manual recovery completes it
+    assert reg3.active_version() == v1 + 1
+
+
+def test_registry_crash_before_activate_replace(tmp_path):
+    """Death after the pointer temp is written but before os.replace:
+    ACTIVE keeps naming the previous version."""
+    from repro.glm_serve.registry import ModelRegistry
+
+    reg, result, cfg = _registry_fixture(tmp_path)
+    v1 = reg.publish(result, cfg)
+    v2 = reg.publish(result, cfg, activate=False)
+    inj = FaultInjector(FaultPlan(crash_at=frozenset({"activate:staged"})))
+    reg_f = ModelRegistry(reg.path, fault_injector=inj)
+    with pytest.raises(SimulatedCrash):
+        reg_f.activate(v2)
+    assert ModelRegistry(reg.path).active_version() == v1
+    reg.activate(v2)
+    assert reg.active_version() == v2
+
+
+# ---------------------------------------------------------------------------
+# solver integration (1 device, in process)
+# ---------------------------------------------------------------------------
+
+def _solver_problem(tmp_path, name="s"):
+    from repro.data.sparse import make_sparse_glm_data
+    from repro.data.store import ShardStore
+
+    X, y, _ = make_sparse_glm_data(d=96, n=160, density=0.2, alpha=1.0,
+                                   beta=0.5, seed=1)
+    store = ShardStore.from_csr(X, y, str(tmp_path / name), axis="samples",
+                                chunk_size=16)
+    return store
+
+
+def _solver_cfg(**kw):
+    from repro.core import DiscoConfig
+    base = dict(partition="samples", loss="logistic", lam=1e-2, tau=16,
+                max_outer=6, grad_tol=1e-9, ell_block_d=8, ell_block_n=8,
+                partition_block=16)
+    base.update(kw)
+    return DiscoConfig(**base)
+
+
+def test_solver_retry_path_matches_fault_free(tmp_path, ref_mode):
+    """A solve whose chunk reads fail transiently (and are retried)
+    reproduces the fault-free solve exactly."""
+    from repro.core import DiscoSolver
+
+    store = _solver_problem(tmp_path)
+    cfg = _solver_cfg(io_backoff_s=0.0)
+    ref = DiscoSolver.from_store(store, cfg).fit()
+    plan = FaultPlan(seed=5, read_error_rate=0.5, read_error_attempts=1)
+    solver = DiscoSolver.from_store(store, cfg, fault_plan=plan)
+    res = solver.fit()
+    assert solver._faults.faults_injected > 0
+    np.testing.assert_array_equal(res.w, ref.w)
+    assert len(res.history) == len(ref.history)
+    assert _prefetch_threads() == []
+
+
+def test_solver_kill_and_resume_matches(tmp_path, ref_mode):
+    """Kill the solve at outer step 2, resume from the checkpoint, and
+    land on the uninterrupted endpoint with the full history."""
+    from repro.core import DiscoSolver
+
+    store = _solver_problem(tmp_path)
+    cfg = _solver_cfg()
+    ckpt = str(tmp_path / "ckpt")
+    ref = DiscoSolver.from_store(store, cfg).fit()
+
+    plan = FaultPlan(kill_at_step=2)
+    with pytest.raises(SimulatedKill):
+        DiscoSolver.from_store(store, cfg, fault_plan=plan).fit(
+            checkpoint_dir=ckpt)
+    assert latest_checkpoint(ckpt) == 2
+
+    res = DiscoSolver.from_store(store, cfg).fit(checkpoint_dir=ckpt,
+                                                 resume=True)
+    assert len(res.history) == len(ref.history)
+    rel = np.linalg.norm(res.w - ref.w) / np.linalg.norm(ref.w)
+    assert rel <= 1e-7, rel
+    # the final checkpoint reflects the completed solve
+    assert latest_checkpoint(ckpt) == len(ref.history)
+
+
+def test_solver_resume_refuses_cfg_mismatch(tmp_path, ref_mode):
+    from repro.core import DiscoSolver
+
+    store = _solver_problem(tmp_path)
+    ckpt = str(tmp_path / "ckpt")
+    plan = FaultPlan(kill_at_step=1)
+    with pytest.raises(SimulatedKill):
+        DiscoSolver.from_store(store, _solver_cfg(),
+                               fault_plan=plan).fit(checkpoint_dir=ckpt)
+    other = _solver_cfg(lam=2e-2)
+    with pytest.raises(ValueError, match="different config"):
+        DiscoSolver.from_store(store, other).fit(checkpoint_dir=ckpt,
+                                                 resume=True)
+
+
+# ---------------------------------------------------------------------------
+# 4-device subprocess tests (kill/resume + elastic re-plan exactness)
+# ---------------------------------------------------------------------------
+
+KILL_RESUME_SCRIPT = textwrap.dedent("""
+    import os, sys
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    os.environ["REPRO_KERNEL_MODE"] = "ref"
+    import numpy as np
+    import jax
+    assert len(jax.devices()) == 4
+    from repro.core import DiscoConfig, DiscoSolver
+    from repro.data.sparse import make_sparse_glm_data
+    from repro.data.store import ShardStore
+    from repro.robust.faults import FaultPlan
+
+    mode, work = sys.argv[1], sys.argv[2]
+    X, y, _ = make_sparse_glm_data(d=96, n=640, density=0.15, alpha=1.0,
+                                   beta=0.6, seed=2)
+    cfg = DiscoConfig(partition="samples", loss="logistic", lam=1e-2,
+                      tau=16, max_outer=5, grad_tol=1e-10, ell_block_d=8,
+                      ell_block_n=16, partition_block=32)
+    mesh = jax.make_mesh((4,), ("data",))
+    spath = os.path.join(work, "store")
+    if not os.path.isdir(spath):
+        ShardStore.from_csr(X, y, spath, axis="samples", chunk_size=32)
+    store = ShardStore(spath)
+    ckpt = os.path.join(work, "ckpt")
+
+    if mode == "ref":
+        r = DiscoSolver.from_store(store, cfg, mesh=mesh).fit()
+        np.save(os.path.join(work, "w_ref.npy"), r.w)
+        np.save(os.path.join(work, "hist_len.npy"),
+                np.array([len(r.history)]))
+        print("REF_DONE")
+    elif mode == "kill":
+        plan = FaultPlan(kill_at_step=2)
+        solver = DiscoSolver.from_store(store, cfg, mesh=mesh,
+                                        fault_plan=plan)
+        solver.fit(checkpoint_dir=ckpt)          # SimulatedKill -> exit!=0
+        print("UNREACHABLE")
+    elif mode == "resume":
+        r = DiscoSolver.from_store(store, cfg, mesh=mesh).fit(
+            checkpoint_dir=ckpt, resume=True)
+        w_ref = np.load(os.path.join(work, "w_ref.npy"))
+        hist_len = int(np.load(os.path.join(work, "hist_len.npy"))[0])
+        assert len(r.history) == hist_len, (len(r.history), hist_len)
+        rel = float(np.linalg.norm(r.w - w_ref) / np.linalg.norm(w_ref))
+        print("rel err", rel)
+        assert rel <= 1e-7, rel
+        print("RESUME_PASS")
+""")
+
+
+@pytest.mark.slow
+def test_kill_and_resume_4device(tmp_path):
+    """The tentpole acceptance: a 4-device streaming solve killed
+    mid-run (nonzero subprocess exit) resumes from its checkpoint in a
+    fresh process and matches the uninterrupted solve to <= 1e-7."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    work = str(tmp_path)
+
+    def run(mode):
+        return subprocess.run(
+            [sys.executable, "-c", KILL_RESUME_SCRIPT, mode, work],
+            env=env, capture_output=True, text=True, timeout=540)
+
+    r = run("ref")
+    assert r.returncode == 0 and "REF_DONE" in r.stdout, \
+        r.stdout + r.stderr
+    r = run("kill")
+    assert r.returncode != 0, "kill run should die"
+    assert "SimulatedKill" in r.stderr, r.stdout + r.stderr
+    assert "UNREACHABLE" not in r.stdout
+    assert os.path.isdir(os.path.join(work, "ckpt"))
+    r = run("resume")
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "RESUME_PASS" in r.stdout, r.stdout + r.stderr
+
+
+REPLAN_SCRIPT = textwrap.dedent("""
+    import os, tempfile
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    os.environ["REPRO_KERNEL_MODE"] = "ref"
+    import numpy as np
+    import jax
+    assert len(jax.devices()) == 4
+    from repro.core import DiscoConfig, DiscoSolver
+    from repro.data.sparse import make_sparse_glm_data
+    from repro.data.store import ShardStore
+    from repro.data.stream import plan_streams
+    from repro.robust.faults import FaultPlan
+
+    X, y, _ = make_sparse_glm_data(d=48, n=2048, density=0.15, alpha=1.0,
+                                   beta=0.6, seed=3)
+    kw = dict(partition="samples", loss="logistic", lam=1e-2, tau=32,
+              max_outer=3, grad_tol=1e-10, ell_block_d=16,
+              ell_block_n=128, partition_block=128)
+    mesh = jax.make_mesh((4,), ("data",))
+    with tempfile.TemporaryDirectory() as td:
+        store = ShardStore.from_csr(X, y, td + "/s", axis="samples",
+                                    chunk_size=128)
+        # straggle every chunk the static plan puts on shard 0 (a
+        # degraded volume): the injected latency follows the chunks
+        probe = plan_streams(store, m=4, block_rows=16, block_cols=128)
+        slow = {int(c): 0.04 for c in probe.schedule[0] if c >= 0}
+
+        static = DiscoSolver.from_store(
+            store, DiscoConfig(**kw), mesh=mesh).fit()
+        cfg = DiscoConfig(elastic_replan=True, replan_threshold=1.3, **kw)
+        r = DiscoSolver.from_store(store, cfg, mesh=mesh,
+                                   fault_plan=FaultPlan(slow_chunks=slow)
+                                   ).fit()
+    assert len(r.replan_events) >= 1, r.replan_events
+    ev = r.replan_events[0]
+    print("replan event:", ev)
+    assert ev["moved_chunks"] > 0
+    assert ev["barrier_s_after"] < ev["barrier_s_before"]
+    rel = float(np.linalg.norm(r.w - static.w) / np.linalg.norm(static.w))
+    print("replan-vs-static rel err", rel)
+    assert rel <= 1e-5, rel
+    print("REPLAN_PASS")
+""")
+
+
+@pytest.mark.slow
+def test_elastic_replan_4device_matches_static():
+    """Mid-PCG elastic re-planning is exact: with one shard's chunks
+    straggling, the re-planned 4-device solve fires at least one replan
+    event and still lands on the static solve's endpoint."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", REPLAN_SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=540)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "REPLAN_PASS" in r.stdout

@@ -406,6 +406,120 @@ def test_plan_schedule_invariants(tmp_path, axis):
         * stats.max_step_bytes
 
 
+# ---------------------------------------------------------------------------
+# v2 checksums: corruption detected at the read site, v1 still readable
+# ---------------------------------------------------------------------------
+
+def _checksum_store(tmp_path, name="s", d=12, n=10, chunk=4):
+    X, Xd = _random_csr(d, n, 0.5, seed=20)
+    y = np.arange(n, dtype=np.float32)
+    store = ShardStore.from_csr(X, y, str(tmp_path / name),
+                                axis="features", chunk_size=chunk)
+    return store, Xd, y
+
+
+@pytest.mark.parametrize("field", ["indptr", "indices", "data"])
+def test_store_checksum_detects_bit_flip(tmp_path, field):
+    """One flipped payload bit in any chunk array raises
+    ChunkCorruptionError naming the chunk index and field."""
+    from repro.robust.faults import ChunkCorruptionError, corrupt_chunk_file
+
+    store, _, _ = _checksum_store(tmp_path)
+    cid = 1
+    corrupt_chunk_file(store, cid, field=field, seed=3)
+    with pytest.raises(ChunkCorruptionError,
+                       match=f"chunk {cid} field '{field}'"):
+        store.chunk_csr(cid)
+    # other chunks still verify clean
+    store.chunk_csr(0)
+    # verify opt-out (forensics escape hatch) reads the damaged bytes
+    store.chunk_csr(cid, verify=False)
+
+
+def test_store_checksum_detects_truncation(tmp_path):
+    """A torn (truncated) chunk file fails loudly with the chunk index —
+    either as an unreadable npy or as a checksum mismatch."""
+    from repro.robust.faults import ChunkCorruptionError, truncate_chunk_file
+
+    store, _, _ = _checksum_store(tmp_path)
+    truncate_chunk_file(store, 2, field="data", drop_bytes=3)
+    with pytest.raises(ChunkCorruptionError, match="chunk 2"):
+        store.chunk_csr(2, mmap=False)
+
+
+def test_store_labels_checksum(tmp_path):
+    store, _, y = _checksum_store(tmp_path)
+    from repro.robust.faults import ChunkCorruptionError
+
+    p = os.path.join(store.path, "labels.npy")
+    size = os.path.getsize(p)
+    with open(p, "r+b") as f:
+        f.seek(size - 2)
+        b = f.read(1)
+        f.seek(size - 2)
+        f.write(bytes([b[0] ^ 0x01]))
+    with pytest.raises(ChunkCorruptionError, match="labels"):
+        store.labels()
+    np.testing.assert_array_equal(store.labels(verify=False).shape, y.shape)
+
+
+def test_store_checksum_property(tmp_path):
+    """Property test: ANY single bit flip in ANY chunk field, and ANY
+    truncation, is detected with the damaged chunk named in the error."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    from repro.robust.faults import (ChunkCorruptionError,
+                                     corrupt_chunk_file,
+                                     truncate_chunk_file)
+
+    counter = [0]
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        cid=st.integers(0, 2),
+        field=st.sampled_from(["indptr", "indices", "data"]),
+        damage=st.sampled_from(["flip", "truncate"]),
+        seed=st.integers(0, 2 ** 16),
+    )
+    def detects(cid, field, damage, seed):
+        counter[0] += 1
+        store, _, _ = _checksum_store(tmp_path, name=f"h{counter[0]}")
+        if damage == "flip":
+            corrupt_chunk_file(store, cid, field=field, seed=seed)
+        else:
+            truncate_chunk_file(store, cid, field=field,
+                                drop_bytes=1 + seed % 16)
+        with pytest.raises(ChunkCorruptionError, match=f"chunk {cid}"):
+            store.chunk_csr(cid, mmap=False)
+
+    detects()
+
+
+def test_store_v1_backward_compat(tmp_path):
+    """A v1 store (no checksums in the header) still opens and reads:
+    verification is skipped, data round-trips exactly."""
+    import json
+
+    store, Xd, y = _checksum_store(tmp_path)
+    meta_path = os.path.join(store.path, "meta.json")
+    with open(meta_path) as f:
+        meta = json.load(f)
+    meta["version"] = 1
+    meta.pop("labels_crc", None)
+    for c in meta["chunks"]:
+        c.pop("crc", None)
+    with open(meta_path, "w") as f:
+        json.dump(meta, f)
+    v1 = ShardStore(store.path)            # verify=True, nothing to check
+    assert v1.version == 1
+    assert v1.labels_crc is None
+    assert all(c.crc is None for c in v1.chunks)
+    X2, y2 = v1.to_csr()
+    np.testing.assert_array_equal(X2.todense(), Xd)
+    np.testing.assert_array_equal(y2, y)
+
+
 def test_plan_rejects_misaligned_chunk(tmp_path):
     X, _, _ = make_sparse_glm_data(d=32, n=32, density=0.2, seed=2)
     store = ShardStore.from_csr(X, np.zeros(32, np.float32),

@@ -32,8 +32,10 @@ SKIP_MD = {"CHANGES.md"}                    # running log, not documentation
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 
 PUBLIC_PACKAGES = ["repro.core", "repro.data", "repro.kernels",
-                   "repro.utils", "repro.glm_serve"]
-FUNCTION_MODULES = ["repro.core.comm", "repro.kernels.ops"]
+                   "repro.utils", "repro.glm_serve", "repro.robust"]
+FUNCTION_MODULES = ["repro.core.comm", "repro.kernels.ops",
+                    "repro.robust.retry", "repro.robust.checkpoint",
+                    "repro.robust.straggler", "repro.robust.faults"]
 
 
 def check_links() -> list[str]:

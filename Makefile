@@ -2,15 +2,24 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast bench bench-smoke bench-sstep bench-loadbalance \
-	bench-streaming bench-serving bench-hvp bench-faults serve-demo \
-	docs-check
+.PHONY: test test-fast test-matrix bench bench-smoke bench-sstep \
+	bench-loadbalance bench-streaming bench-serving bench-hvp \
+	bench-faults bench-lambda-path serve-demo docs-check
 
 test: docs-check bench-smoke ## tier-1 verify: docs gate + bench smoke + full suite
 	$(PY) -m pytest -x -q
 
 test-fast:       ## skip the slow multi-device subprocess tests
 	$(PY) -m pytest -x -q -m "not slow"
+
+test-matrix:     ## HVP dispatch-cell conformance suite + coverage report
+	$(PY) -m pytest -q tests/test_hvp_operator.py
+	@$(PY) -c "from repro.core.hvp import render_support_matrix, \
+	operator_cells; cells = operator_cells(); \
+	print(render_support_matrix()); \
+	print(f'{sum(c.supported for c in cells)}/{len(cells)} cells ' \
+	      'supported; every supported cell is conformance-checked ' \
+	      '(tests/test_hvp_operator.py fails on uncovered cells)')"
 
 docs-check:      ## fail on broken doc links / missing docstrings / unwired bench gates
 	$(PY) tools/docs_check.py
@@ -38,6 +47,9 @@ bench-hvp:       ## fused one-pass HVP + mixed-precision gate only (BENCH_hvp.js
 
 bench-faults:    ## fault-tolerance gate only (straggler re-plan recovery + retry accuracy)
 	$(PY) -m benchmarks.bench_faults
+
+bench-lambda-path: ## one-pass lambda-path sweep gate only (>= 2x fewer X passes)
+	$(PY) -m benchmarks.bench_lambda_path
 
 serve-demo:      ## end-to-end serving demo: fit -> publish -> score -> refit -> hot swap
 	$(PY) examples/glm_serve_demo.py

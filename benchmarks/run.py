@@ -25,7 +25,7 @@ def main(argv=None):
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig3,fig4,fig5,table4,"
                          "sstep,loadbalance,streaming,serving,hvp_fused,"
-                         "faults,woodbury,amdahl,roofline")
+                         "faults,lambda_path,woodbury,amdahl,roofline")
     args = ap.parse_args(argv)
 
     if args.smoke:
@@ -41,7 +41,7 @@ def main(argv=None):
             # these run many full fits (or a forced-8-device subprocess)
             return name not in ("fig3", "sstep", "loadbalance",
                                 "streaming", "serving", "hvp_fused",
-                                "faults")
+                                "faults", "lambda_path")
         return True
 
     t0 = time.perf_counter()
@@ -76,6 +76,10 @@ def main(argv=None):
     if want("faults"):
         from benchmarks import bench_faults
         bench_faults.run()
+        print()
+    if want("lambda_path"):
+        from benchmarks import bench_lambda_path
+        bench_lambda_path.run()
         print()
     if want("woodbury"):
         from benchmarks import bench_woodbury

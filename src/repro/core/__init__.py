@@ -1,17 +1,38 @@
 """Paper core: DiSCO-S / DiSCO-F distributed inexact damped Newton."""
-from repro.core.losses import get_loss, LOSSES, QUADRATIC, LOGISTIC, SQUARED_HINGE
+from repro.core.losses import (get_loss, make_huber, LOSSES, QUADRATIC,
+                               LOGISTIC, SQUARED_HINGE, POISSON, HUBER)
 from repro.core.glm import GLMProblem
 from repro.core.preconditioner import (WoodburyPreconditioner,
                                        IdentityPreconditioner, sag_solve)
 from repro.core.pcg import pcg_samples, pcg_features, pcg_streamed, PCGResult
 from repro.core.disco import (DiscoConfig, DiscoSolver, DiscoResult,
                               disco_fit, disco_fit_streaming)
+from repro.core.hvp import (HvpOperator, DenseOperator, DenseKernelOperator,
+                            EllOperator, StreamedHvpOperator,
+                            SoftmaxHvpOperator, UnsupportedHvpError,
+                            OperatorCell, operator_cells, resolve_cell,
+                            validate_solver_cell, make_local_operator,
+                            cell_id, render_support_matrix)
+from repro.core.softmax import (SoftmaxConfig, SoftmaxResult, SoftmaxProblem,
+                                SoftmaxSolver, softmax_fit)
+from repro.core.lambda_path import (LambdaPathResult, lambda_path_fit,
+                                    validation_loss, x_passes)
 from repro.core import comm
 
 __all__ = [
-    "get_loss", "LOSSES", "QUADRATIC", "LOGISTIC", "SQUARED_HINGE",
+    "get_loss", "make_huber", "LOSSES", "QUADRATIC", "LOGISTIC",
+    "SQUARED_HINGE", "POISSON", "HUBER",
     "GLMProblem", "WoodburyPreconditioner", "IdentityPreconditioner",
     "sag_solve", "pcg_samples", "pcg_features", "pcg_streamed",
     "PCGResult", "DiscoConfig", "DiscoSolver", "DiscoResult", "disco_fit",
-    "disco_fit_streaming", "comm",
+    "disco_fit_streaming",
+    "HvpOperator", "DenseOperator", "DenseKernelOperator", "EllOperator",
+    "StreamedHvpOperator", "SoftmaxHvpOperator", "UnsupportedHvpError",
+    "OperatorCell", "operator_cells", "resolve_cell",
+    "validate_solver_cell", "make_local_operator", "cell_id",
+    "render_support_matrix",
+    "SoftmaxConfig", "SoftmaxResult", "SoftmaxProblem", "SoftmaxSolver",
+    "softmax_fit",
+    "LambdaPathResult", "lambda_path_fit", "validation_loss", "x_passes",
+    "comm",
 ]

@@ -26,6 +26,7 @@ from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import comm
+from repro.core.hvp import StreamedHvpOperator, validate_solver_cell
 from repro.core.losses import get_loss
 from repro.core.pcg import pcg_features, pcg_samples
 from repro.data.partition import Partition, make_partition
@@ -246,6 +247,10 @@ class DiscoSolver:
         assert y.shape == (X.shape[1],), "X must be (d, n), y (n,)"
         self.cfg = cfg
         self.loss = get_loss(cfg.loss)
+        validate_solver_cell(family="binary", partition=cfg.partition,
+                             fused=cfg.hvp_fused, dtype=cfg.hvp_dtype,
+                             sparse=self._sparse,
+                             use_kernel=cfg.use_kernel)
         self.d, self.n = X.shape
         self.tau = min(cfg.tau, self.n)
 
@@ -660,6 +665,9 @@ class DiscoSolver:
         self._sparse = True
         self.cfg = cfg
         self.loss = get_loss(cfg.loss)
+        validate_solver_cell(family="binary", partition=cfg.partition,
+                             fused=cfg.hvp_fused, dtype=cfg.hvp_dtype,
+                             streaming=True)
         self.d, self.n = store.shape
         self.tau = min(cfg.tau, self.n)
         axis = "model" if cfg.partition == "features" else "data"
@@ -842,9 +850,7 @@ class DiscoSolver:
 
         plan, m = self._plan, self.m
         acc = jnp.zeros(u.shape, u.dtype)
-        itemsize = np.dtype(plan.hvp_dtype or plan.store.dtype).itemsize
-        fused = self.cfg.hvp_fused and kops.ell_fused_fits(
-            plan.w_tr, plan.block_cols, plan.block_rows, itemsize,
+        fused = self.cfg.hvp_fused and plan.fused_hvp_fits(
             self.d_padded, s=(u.shape[1] if multi else 1))
         if fused:
             op = kops.ell_hvp_mm if multi else kops.ell_hvp
@@ -999,15 +1005,29 @@ class DiscoSolver:
                         f"unknown precond {cfg.precond!r} for streaming "
                         "DiSCO-F")
 
+                # two-pass only: the pass-A accumulation over chunks IS
+                # the cross-shard reduce, so the fused flag is rejected
+                # at from_store (see core/hvp.py registry)
+                op = StreamedHvpOperator(
+                    apply=lambda u: self._stream_x(
+                        self._stream_xt(u, hvp=True), coeffs=c_eff,
+                        hvp=True),
+                    apply_multi=lambda U: self._stream_x(
+                        self._stream_xt(U, multi=True, hvp=True),
+                        coeffs=c_eff, multi=True, hvp=True),
+                    pass_a=lambda u: self._stream_xt(u, hvp=True),
+                    pass_b=lambda z: self._stream_x(
+                        z, coeffs=c_eff, hvp=True),
+                    pass_a_multi=lambda U: self._stream_xt(
+                        U, multi=True, hvp=True),
+                    pass_b_multi=lambda Z: self._stream_x(
+                        Z, coeffs=c_eff, multi=True, hvp=True))
+
                 def hvp(u):
-                    z = self._stream_xt(u, hvp=True)
-                    return self._stream_x(z, coeffs=c_eff, hvp=True) / n \
-                        + lam * u
+                    return op.apply(u) / n + lam * u
 
                 def hvp_multi(U):
-                    Z = self._stream_xt(U, multi=True, hvp=True)
-                    return self._stream_x(Z, coeffs=c_eff, multi=True,
-                                          hvp=True) / n + lam * U
+                    return op.apply_multi(U) / n + lam * U
 
                 def basis_op(u):
                     z_loc = self._stream_xt(u, local=True, hvp=True)
@@ -1057,13 +1077,18 @@ class DiscoSolver:
                 # layout the CURRENT schedule expects
                 state = dict(c_eff=c_eff)
 
+                op = StreamedHvpOperator(
+                    apply=lambda u: self._stream_hvp_samples(
+                        u, state["c_eff"]),
+                    apply_multi=lambda U: self._stream_hvp_samples(
+                        U, state["c_eff"], multi=True),
+                    fused=cfg.hvp_fused)
+
                 def hvp(u):
-                    return self._stream_hvp_samples(u, state["c_eff"]) \
-                        / n + lam * u
+                    return op.apply(u) / n + lam * u
 
                 def hvp_multi(U):
-                    return self._stream_hvp_samples(
-                        U, state["c_eff"], multi=True) / n + lam * U
+                    return op.apply_multi(U) / n + lam * U
 
                 if m == 1:
                     basis_op = hvp            # exact single-shard operator
@@ -1090,6 +1115,31 @@ class DiscoSolver:
                 return w_new, stats
 
         return step
+
+    # ------------------------------------------------------------------
+    def with_lam(self, lam: float) -> "DiscoSolver":
+        """Cheap clone at a different regularization weight — the λ-path
+        primitive (:mod:`repro.core.lambda_path`).
+
+        Shares every sharded device array (X, its HVP-dtype copy, ELL
+        tiles, labels, the tau slab) with ``self`` and rebuilds only the
+        compiled step, so sweeping a λ grid pays the data layout once.
+        In-memory solvers only; streaming solves rebuild via
+        :meth:`from_store` per λ.
+        """
+        if self._streaming:
+            raise ValueError(
+                "with_lam shares in-memory device arrays; a streaming "
+                "solver must be rebuilt with DiscoSolver.from_store for "
+                "each lam")
+        import copy
+
+        new = copy.copy(self)
+        new.cfg = dataclasses.replace(self.cfg, lam=float(lam))
+        new._replan_events = []
+        new._outer_iter = 0
+        new._step = new._build_step()
+        return new
 
     # ------------------------------------------------------------------
     def _comm_costs(self, pcg_iters: int) -> tuple[int, int, int]:

@@ -100,16 +100,19 @@ class GLMProblem:
         return glm_margins(self.X if X is None else X, np.asarray(w))
 
     def predict(self, w, X=None) -> np.ndarray:
-        """Predicted labels for a fitted ``w``.
+        """Predicted response for a fitted ``w``.
 
         Classification losses ('logistic', 'squared_hinge') return ±1
         by the sign of the margin (ties break to +1, matching the
-        label convention); 'quadratic' returns the margin itself (a
-        regression fit predicts the real-valued response).
+        label convention); the regression losses 'quadratic' and
+        'huber' return the margin itself; 'poisson' returns the
+        predicted mean rate ``exp(margin)`` (canonical log link).
         """
         a = self.decision_function(w, X)
-        if self.loss.name == "quadratic":
+        if self.loss.name in ("quadratic", "huber"):
             return a
+        if self.loss.name == "poisson":
+            return np.exp(a)
         return np.where(a >= 0, 1.0, -1.0).astype(a.dtype)
 
     def predict_proba(self, w, X=None) -> np.ndarray:

@@ -1,0 +1,177 @@
+"""One-pass λ-path sweeps: warm-started regularization grids that share
+X traffic.
+
+Model selection fits the same GLM at many regularization weights λ and
+picks the best by validation loss. Fit independently ("cold"), every λ
+pays the full Newton trajectory from zero — and every Newton/PCG
+iteration is passes over X. The path sweep instead walks the grid from
+the most- to the least-regularized λ, warm-starting each solve at the
+previous solution: DiSCO's damped Newton is self-concordant and
+affine-invariant (Zhang & Xiao 2015), so a near-solution re-converges in
+a handful of outer iterations, and the whole grid rides one data layout
+(:meth:`repro.core.disco.DiscoSolver.with_lam` shares the sharded device
+arrays — X is placed once for the entire path).
+
+The analytic X-pass ledger (:func:`x_passes`) counts data passes the way
+the kernels actually move bytes: a *multi-vector* pass (``xt_multi`` /
+``ell_matmat`` / the s-step round batch) reads X ONCE no matter how many
+columns ride it, and a one-pass *fused* HVP halves the two-pass count.
+``benchmarks/bench_lambda_path.py`` gates the warm path at >= 2x fewer
+X passes than independent cold refits, at matching solutions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import numpy as np
+
+from repro.core.disco import DiscoConfig, DiscoResult, DiscoSolver
+from repro.core.glm import glm_margins
+from repro.core.losses import get_loss
+
+
+@dataclasses.dataclass
+class LambdaPathResult:
+    """Outcome of :func:`lambda_path_fit`.
+
+    Attributes:
+        lambdas: the grid in the order fitted (descending λ).
+        results: one :class:`repro.core.disco.DiscoResult` per λ.
+        x_passes: analytic X data passes each solve cost
+            (:func:`x_passes`).
+        val_losses: mean validation loss per λ (None without a
+            validation set).
+        best_index: argmin of ``val_losses`` (None without one).
+    """
+
+    lambdas: list[float]
+    results: list[DiscoResult]
+    x_passes: list[int]
+    val_losses: list[float] | None = None
+    best_index: int | None = None
+
+    @property
+    def total_x_passes(self) -> int:
+        """Total analytic X passes over the whole grid."""
+        return int(sum(self.x_passes))
+
+    @property
+    def best_lambda(self) -> float | None:
+        """λ minimizing the validation loss (None without one)."""
+        return (None if self.best_index is None
+                else self.lambdas[self.best_index])
+
+    @property
+    def best_result(self) -> DiscoResult | None:
+        """The winning fit (None without a validation set)."""
+        return (None if self.best_index is None
+                else self.results[self.best_index])
+
+
+def x_passes(history: Sequence[dict[str, Any]], cfg: DiscoConfig,
+             axis_size: int = 1) -> int:
+    """Analytic count of full passes over X for one solve's history.
+
+    Per outer iteration: 2 passes for margins + gradient (pass A, then
+    pass B), plus the PCG cost —
+
+    * classic PCG (``pcg_block_s == 1``): each iteration is one HVP =
+      2 passes two-pass, 1 pass fused;
+    * s-step: each round pays ONE batched multi-vector HVP (a
+      multi-vector kernel pass reads X once regardless of column count)
+      plus ``s - 1`` basis-operator applications. The DiSCO-S
+      multi-shard basis operator runs on the replicated tau slab — zero
+      X passes — while the single-shard / DiSCO-F basis operators touch
+      X (fused basis ops count 1, two-pass 2).
+
+    The ledger counts the mixed-precision HVP copy of X as X itself
+    (same pass structure; docs/kernels.md covers the byte discount).
+    """
+    per_hvp = 1 if cfg.hvp_fused else 2
+    s = cfg.pcg_block_s
+    total = 0
+    for h in history:
+        inner_units = int(h["pcg_iters"])
+        if s <= 1:
+            inner = inner_units * per_hvp
+        else:
+            basis_uses_x = not (cfg.partition == "samples"
+                                and axis_size > 1)
+            per_round = per_hvp + (s - 1) * (per_hvp if basis_uses_x
+                                             else 0)
+            inner = inner_units * per_round
+        total += 2 + inner
+    return total
+
+
+def validation_loss(w, X_val, y_val, loss_name: str = "logistic",
+                    ) -> float:
+    """Mean validation loss of a fitted ``w`` on held-out data
+    (dense array or :class:`repro.data.sparse.CSRMatrix`)."""
+    import jax.numpy as jnp
+
+    loss = get_loss(loss_name)
+    a = jnp.asarray(glm_margins(X_val, np.asarray(w)))
+    return float(jnp.mean(loss.value(a, jnp.asarray(y_val))))
+
+
+def lambda_path_fit(X, y, lambdas: Sequence[float],
+                    cfg: DiscoConfig | None = None, mesh=None,
+                    warm: bool = True, X_val=None, y_val=None,
+                    w0: np.ndarray | None = None) -> LambdaPathResult:
+    """Fit a λ grid, warm-started down the path, on ONE data layout.
+
+    The grid is sorted descending (strongest regularization first — the
+    easiest, most-contractive solve) and each subsequent λ starts at the
+    previous optimum via :meth:`DiscoSolver.with_lam` clones that share
+    every sharded device array. ``warm=False`` is the cold baseline
+    (same shared layout, but every λ starts from ``w0``/zeros) the
+    ``bench_lambda_path`` gate compares against.
+
+    With a validation set (``X_val``, ``y_val``) each fit is scored by
+    :func:`validation_loss` and ``best_index``/``best_lambda`` select
+    the winner — the model-selection loop
+    :meth:`repro.glm_serve.refit.RefitLoop.refit_path` feeds on.
+
+    Args:
+        X: (d, n) dense array or :class:`repro.data.sparse.CSRMatrix`.
+        y: (n,) labels.
+        lambdas: regularization grid (any order; fitted descending).
+        cfg: base solver config; its ``lam`` is overridden per grid
+            point.
+        mesh: optional 1-axis mesh forwarded to the solver.
+        warm: warm-start each λ at the previous solution.
+        X_val, y_val: optional held-out set for model selection.
+        w0: optional start for the first (or with ``warm=False``,
+            every) solve.
+    """
+    cfg = cfg or DiscoConfig()
+    lams = sorted((float(l) for l in lambdas), reverse=True)
+    if not lams:
+        raise ValueError("lambda_path_fit needs at least one lambda")
+
+    solver = DiscoSolver(X, y, dataclasses.replace(cfg, lam=lams[0]),
+                         mesh=mesh)
+    results: list[DiscoResult] = []
+    passes: list[int] = []
+    w_prev = w0
+    for i, lam in enumerate(lams):
+        if i > 0:
+            solver = solver.with_lam(lam)
+        res = solver.fit(w0=(w_prev if (warm or i == 0) else w0))
+        results.append(res)
+        passes.append(x_passes(res.history, solver.cfg,
+                               axis_size=solver.m))
+        if warm:
+            w_prev = res.w
+
+    val_losses = None
+    best_index = None
+    if X_val is not None and y_val is not None:
+        val_losses = [validation_loss(r.w, X_val, y_val, cfg.loss)
+                      for r in results]
+        best_index = int(np.argmin(val_losses))
+    return LambdaPathResult(lambdas=lams, results=results,
+                            x_passes=passes, val_losses=val_losses,
+                            best_index=best_index)

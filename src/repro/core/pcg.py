@@ -47,6 +47,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.hvp import make_local_operator
 from repro.core.preconditioner import WoodburyPreconditioner, sag_solve
 from repro.data.sparse import EllPair
 
@@ -315,65 +316,17 @@ def pcg_samples(X_loc, coeffs_loc, n_global, lam, g, eps, max_iter,
                   HVP here — X tiles stream from HBM once per application.
     """
     n_global = jnp.asarray(n_global, g.dtype)
-    sparse = isinstance(X_loc, EllPair)
 
-    # ONE definition of the local (multi-)HVP product per backend; every
-    # site below (classic hvp, s-step basis operator, s-step round)
-    # frames it with its own collective and scale. DiSCO-S products are
-    # local by construction (the psum comes after), so ``hvp_fused``
-    # swaps in the one-pass kernels everywhere here.
-    if sparse:
-        # blocked-ELL HVP (kernels/sparse_hvp.py): two-pass streams the
-        # transposed then the forward layout; the fused one-pass kernel
-        # completes both directions from the transposed layout alone.
-        # (``use_kernel`` is moot — the ELL ops dispatch native/
-        # interpret/ref via REPRO_KERNEL_MODE.)
-        from repro.kernels import ops as kops
-
-        if hvp_fused:
-            def local_hvp(u):
-                return kops.ell_hvp(X_loc.dataT, X_loc.colsT, u,
-                                    coeffs_loc,
-                                    fwd=(X_loc.data, X_loc.cols))
-
-            def local_hvp_multi(U):
-                return kops.ell_hvp_mm(X_loc.dataT, X_loc.colsT, U,
-                                       coeffs_loc,
-                                       fwd=(X_loc.data, X_loc.cols))
-        else:
-            def local_hvp(u):
-                z = kops.ell_matvec(X_loc.dataT, X_loc.colsT, u)
-                return kops.ell_matvec(X_loc.data, X_loc.cols, z,
-                                       coeffs_loc)
-
-            def local_hvp_multi(U):
-                Z = kops.ell_matmat(X_loc.dataT, X_loc.colsT, U)
-                return kops.ell_matmat(X_loc.data, X_loc.cols, Z,
-                                       coeffs_loc)
-    elif use_kernel:
-        # Pallas HVP (kernels/glm_hvp.py) on the local shard.
-        from repro.kernels import ops as kops
-
-        if hvp_fused:
-            def local_hvp(u):
-                return kops.x_c_xt_u(X_loc, coeffs_loc, u)
-
-            def local_hvp_multi(U):
-                return kops.x_c_xt_multi(X_loc, coeffs_loc, U)
-        else:
-            def local_hvp(u):
-                z = kops.xt_u(X_loc, u)
-                return kops.x_cz_local(X_loc, coeffs_loc, z)
-
-            def local_hvp_multi(U):
-                Z = kops.xt_multi(X_loc, U)
-                return kops.x_cz_multi(X_loc, coeffs_loc, Z)
-    else:
-        def local_hvp(u):
-            return X_loc @ (coeffs_loc * (X_loc.T @ u))
-
-        def local_hvp_multi(U):
-            return X_loc @ (coeffs_loc[:, None] * (X_loc.T @ U))
+    # ONE local (multi-)HVP operator per solve (core/hvp.py dispatches by
+    # layout and validates the cell); every site below (classic hvp,
+    # s-step basis operator, s-step round) frames it with its own
+    # collective and scale. DiSCO-S products are local by construction
+    # (the psum comes after), so ``hvp_fused`` swaps in the one-pass
+    # kernels everywhere here.
+    op = make_local_operator(X_loc, coeffs_loc, use_kernel=use_kernel,
+                             fused=hvp_fused, partition="samples")
+    local_hvp = op.apply
+    local_hvp_multi = op.apply_multi
 
     def hvp(u):
         return lax.psum(local_hvp(u), axis_name) / n_global + lam * u
@@ -467,80 +420,18 @@ def pcg_features(X_loc, coeffs, n_global, lam, g_loc, eps, max_iter,
                  stays two-pass by construction.
     """
     n_global = jnp.asarray(n_global, g_loc.dtype)
-    sparse = isinstance(X_loc, EllPair)
-    fuse_full = hvp_fused and axis_size == 1   # psum(z) == z on 1 shard
 
-    # Per-backend pieces, each defined ONCE: the split passes (A then B —
-    # the psum between them IS DiSCO-F's communication, so the true
-    # multi-shard HVP can never fuse) and the collective-free local
+    # ONE local operator per solve (core/hvp.py): the split passes (A
+    # then B — the psum between them IS DiSCO-F's communication, so the
+    # true multi-shard HVP can never fuse) and the collective-free local
     # product (one-pass fused when requested), which serves the s-step
     # basis operator at any shard count and the full HVP at m = 1.
-    if sparse:
-        from repro.kernels import ops as kops
-
-        def passA(u_loc):
-            return kops.ell_matvec(X_loc.dataT, X_loc.colsT, u_loc)
-
-        def passB(z):
-            return kops.ell_matvec(X_loc.data, X_loc.cols, z, coeffs)
-
-        def passA_multi(U):
-            return kops.ell_matmat(X_loc.dataT, X_loc.colsT, U)
-
-        def passB_multi(Z):
-            return kops.ell_matmat(X_loc.data, X_loc.cols, Z, coeffs)
-
-        if hvp_fused:
-            def local_hvp(u_loc):
-                return kops.ell_hvp(X_loc.dataT, X_loc.colsT, u_loc,
-                                    coeffs, fwd=(X_loc.data, X_loc.cols))
-
-            def local_hvp_multi(U):
-                return kops.ell_hvp_mm(X_loc.dataT, X_loc.colsT, U,
-                                       coeffs,
-                                       fwd=(X_loc.data, X_loc.cols))
-        else:
-            local_hvp = lambda u_loc: passB(passA(u_loc))
-            local_hvp_multi = lambda U: passB_multi(passA_multi(U))
-    elif use_kernel:
-        from repro.kernels import ops as kops
-
-        def passA(u_loc):
-            return kops.xt_u(X_loc, u_loc)
-
-        def passB(z):
-            return kops.x_cz_local(X_loc, coeffs, z)
-
-        def passA_multi(U):
-            return kops.xt_multi(X_loc, U)
-
-        def passB_multi(Z):
-            return kops.x_cz_multi(X_loc, coeffs, Z)
-
-        if hvp_fused:
-            def local_hvp(u_loc):
-                return kops.x_c_xt_u(X_loc, coeffs, u_loc)
-
-            def local_hvp_multi(U):
-                return kops.x_c_xt_multi(X_loc, coeffs, U)
-        else:
-            local_hvp = lambda u_loc: passB(passA(u_loc))
-            local_hvp_multi = lambda U: passB_multi(passA_multi(U))
-    else:
-        def passA(u_loc):
-            return X_loc.T @ u_loc
-
-        def passB(z):
-            return X_loc @ (coeffs * z)
-
-        def passA_multi(U):
-            return X_loc.T @ U
-
-        def passB_multi(Z):
-            return X_loc @ (coeffs[:, None] * Z)
-
-        local_hvp = lambda u_loc: passB(passA(u_loc))
-        local_hvp_multi = lambda U: passB_multi(passA_multi(U))
+    op = make_local_operator(X_loc, coeffs, use_kernel=use_kernel,
+                             fused=hvp_fused, partition="features")
+    passA, passB = op.pass_a, op.pass_b
+    passA_multi, passB_multi = op.pass_a_multi, op.pass_b_multi
+    local_hvp, local_hvp_multi = op.apply, op.apply_multi
+    fuse_full = op.fused and axis_size == 1    # psum(z) == z on 1 shard
 
     if fuse_full:
         def hvp(u_loc):

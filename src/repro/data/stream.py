@@ -279,6 +279,23 @@ class StreamPlan:
                 else self.block_rows)
         return max(-(-other // edge), 1) * edge
 
+    def fused_hvp_fits(self, u_len: int, s: int = 1) -> bool:
+        """Whether the one-pass fused ELL kernel fits VMEM for THIS plan.
+
+        Applies :func:`repro.kernels.ops.ell_fused_fits` to the plan's
+        global transposed tile geometry and its HVP staging dtype, so the
+        fused-vs-two-pass choice is made once per stream from the shapes
+        every chunk pads to — an oversized chunk row degrades the whole
+        stream to the two-pass kernels, never to a per-chunk mix.
+        ``u_len`` is the probe-vector length (``d_padded``), ``s`` the
+        multi-vector width.
+        """
+        from repro.kernels import ops as kops
+
+        itemsize = np.dtype(self.hvp_dtype or self.store.dtype).itemsize
+        return kops.ell_fused_fits(self.w_tr, self.block_cols,
+                                   self.block_rows, itemsize, u_len, s=s)
+
     # -- payload construction ---------------------------------------------
     def _chunk_slab(self, cid: int) -> CSRMatrix:
         """Chunk ``cid`` as a full-width (chunk_size-row) CSR slab; id

@@ -83,6 +83,40 @@ class RefitLoop:
                                         activate=activate)
         return version, result
 
+    def refit_path(self, lambdas, X_val=None, y_val=None,
+                   warm: bool = True, activate: bool = True):
+        """Model-selection refit: sweep a λ grid, publish the winner.
+
+        Materializes the store once (:meth:`ShardStore.to_csr`) and runs
+        the warm-started in-memory λ-path
+        (:func:`repro.core.lambda_path.lambda_path_fit`) so the whole
+        grid shares ONE data layout — every λ after the first is a
+        :meth:`DiscoSolver.with_lam` clone. With a validation set the
+        best-λ fit is published (and optionally activated); without one
+        the last (least-regularized) fit is. The served ``cfg.lam`` is
+        updated to the winning λ so later :meth:`refit` calls keep it.
+
+        Returns ``(version, LambdaPathResult)``.
+        """
+        import dataclasses
+
+        from repro.core.lambda_path import lambda_path_fit
+
+        X, y = self.store.to_csr()
+        w0 = None
+        if warm and self.registry.active_version() is not None:
+            w0 = self.registry.load().w
+        path = lambda_path_fit(X, y, lambdas, cfg=self.cfg,
+                               mesh=self.mesh, warm=warm,
+                               X_val=X_val, y_val=y_val, w0=w0)
+        idx = (path.best_index if path.best_index is not None
+               else len(path.results) - 1)
+        best_cfg = dataclasses.replace(self.cfg, lam=path.lambdas[idx])
+        version = self.registry.publish(path.results[idx], best_cfg,
+                                        activate=activate)
+        self.cfg = best_cfg
+        return version, path
+
     def newton_iters(self, result: DiscoResult) -> int:
         """Outer (Newton) iterations a fit took — the warm-vs-cold
         currency of the refit gate."""

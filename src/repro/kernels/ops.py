@@ -281,6 +281,42 @@ def x_c_xt_multi(X, c, U, *, block_d=512, block_n=512, mode=None,
                       mode=mode).astype(out_dtype)
 
 
+def softmax_coupling(probs, V, weights=None):
+    """Softmax class coupling  S = P .* V - P .* rowsum(P .* V).
+
+    The (n, K) mid-chain term of the multinomial Hessian product
+    (docs/workloads.md): elementwise + one row reduction, so it needs no
+    Pallas kernel of its own — it is exactly what sits *between* the
+    multi-vector pass A and pass B, which is why no one-pass fused
+    softmax kernel exists (see ``repro.core.hvp``). ``weights``
+    optionally masks padded samples.
+    """
+    return _ref.ref_softmax_coupling(probs, V, weights)
+
+
+def softmax_hvp(X, probs, U, *, lam=0.0, n_global=None, weights=None,
+                block_d=512, block_n=512, mode=None):
+    """Multinomial softmax Hessian product via the multi-vector kernels.
+
+    H U = X S / n + lam U with S = :func:`softmax_coupling`(P, X^T U):
+    all K classes of the direction ``U`` (d, K) ride ONE ``xt_multi``
+    pass and ONE ``x_cz_multi`` pass — K-class curvature for the X
+    traffic of a single two-pass binary HVP. Dispatches by
+    ``REPRO_KERNEL_MODE`` like every op here.
+    """
+    n = X.shape[1] if n_global is None else n_global
+    mode = mode or _mode()
+    if mode == "ref":
+        return _ref.ref_softmax_hvp(X, probs, U, lam, n_global=n,
+                                    weights=weights)
+    V = xt_multi(X, U, block_d=block_d, block_n=block_n, mode=mode)
+    S = softmax_coupling(probs, V, weights)
+    ones = jnp.ones((X.shape[1],), X.dtype)
+    HU = x_cz_multi(X, ones, S, block_d=block_d, block_n=block_n,
+                    mode=mode)
+    return HU / n + lam * U
+
+
 # ---------------------------------------------------------------------------
 # Blocked-ELL sparse HVP passes (see data/sparse.py for the layout)
 # ---------------------------------------------------------------------------

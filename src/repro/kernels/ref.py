@@ -129,6 +129,44 @@ def ref_ell_hvp_mm_t(dataT, colsT, U, c=None, out_dtype=jnp.float32):
     return y.reshape(nrb * br, s).astype(out_dtype)
 
 
+def ref_softmax_probs(A):
+    """Row-stochastic class probabilities ``P = softmax(A)`` over the
+    trailing (class) axis, computed with the max-shift stabilization
+    (A : (n, K) margins ``X^T W``)."""
+    A = A - jnp.max(A, axis=-1, keepdims=True)
+    E = jnp.exp(A)
+    return E / jnp.sum(E, axis=-1, keepdims=True)
+
+
+def ref_softmax_coupling(P, V, weights=None):
+    """Softmax class coupling  S = P .* V - P .* rowsum(P .* V).
+
+    The (n, K) mid-chain term of the multinomial Hessian product: what
+    sits between the multi-vector pass A (``V = X^T U``) and pass B
+    (``X S``). ``weights`` optionally masks padded samples.
+    """
+    PV = P * V
+    S = PV - P * jnp.sum(PV, axis=1, keepdims=True)
+    if weights is not None:
+        S = weights[:, None] * S
+    return S
+
+
+def ref_softmax_hvp(X, P, U, lam, n_global=None, weights=None):
+    """Multinomial softmax Hessian product on stacked directions.
+
+    H U = X (P .* V - P .* rowsum(P .* V)) / n + lam U,  V = X^T U
+    with X : (d, n), P : (n, K) probabilities, U : (d, K). All K classes
+    ride one multi-vector pass in each direction — the oracle of
+    :func:`repro.kernels.ops.softmax_hvp` and of
+    :class:`repro.core.hvp.SoftmaxHvpOperator`.
+    """
+    n = X.shape[1] if n_global is None else n_global
+    V = X.T @ U
+    S = ref_softmax_coupling(P, V, weights)
+    return X @ S / n + lam * U
+
+
 def ref_attention(q, k, v, causal=True, window=0, scale=None):
     """Masked multi-head attention oracle.
 

@@ -23,26 +23,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from oracles import sparse_case as _sparse_case  # shared NumPy oracles
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
-
-
-def _sparse_case(rng, d, n, density, br, bc, width_pad=0):
-    """Random CSR + its (optionally width-padded) ELL pair + the padded
-    dense equivalent for the NumPy oracle."""
-    from repro.data.sparse import CSRMatrix, ell_pair_from_csr
-
-    Xd = rng.standard_normal((d, n)) * (rng.random((d, n)) < density)
-    csr = CSRMatrix.from_dense(Xd)
-    fwd, tr = ell_pair_from_csr(csr, br, bc)
-    if width_pad:
-        fwd, tr = ell_pair_from_csr(csr, br, bc,
-                                    width=fwd.width + width_pad,
-                                    width_t=tr.width + width_pad)
-    nrb, ncb = fwd.data.shape[0], tr.data.shape[0]
-    Xp = np.zeros((nrb * br, ncb * bc), np.float32)
-    Xp[:d, :n] = Xd
-    return (jnp.asarray(fwd.data), jnp.asarray(fwd.cols),
-            jnp.asarray(tr.data), jnp.asarray(tr.cols), Xp)
 
 
 # ---------------------------------------------------------------------------

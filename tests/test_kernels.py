@@ -7,8 +7,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")  # optional test dep
-from hypothesis import given, settings, strategies as st
+
+try:  # optional test dep — deterministic fallbacks run without it
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.kernels import flash_attention, glm_hvp, xt_u
 from repro.kernels.ref import ref_attention, ref_glm_hvp, ref_xt_u
@@ -34,9 +38,7 @@ def test_glm_hvp_shape_dtype_sweep(rng, d, n, dtype):
                                np.asarray(want), atol=tol * 10, rtol=tol)
 
 
-@given(d=st.integers(1, 300), n=st.integers(1, 300), seed=st.integers(0, 99))
-@settings(max_examples=20, deadline=None)
-def test_glm_hvp_property_random_shapes(d, n, seed):
+def _prop_glm_hvp_shapes(d, n, seed):
     rng = np.random.default_rng(seed)
     X = jnp.asarray(rng.standard_normal((d, n)), jnp.float32)
     c = jnp.asarray(rng.random(n), jnp.float32)
@@ -44,6 +46,20 @@ def test_glm_hvp_property_random_shapes(d, n, seed):
     got = glm_hvp(X, c, u, 0.1, block_d=128, block_n=128)
     want = ref_glm_hvp(X, c, u, 0.1)
     np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("d,n,seed", [(1, 1, 0), (3, 299, 1), (299, 3, 2),
+                                      (127, 129, 3), (256, 256, 4)])
+def test_glm_hvp_random_shapes(d, n, seed):
+    _prop_glm_hvp_shapes(d, n, seed)
+
+
+if HAVE_HYPOTHESIS:
+    @given(d=st.integers(1, 300), n=st.integers(1, 300),
+           seed=st.integers(0, 99))
+    @settings(max_examples=20, deadline=None)
+    def test_glm_hvp_property_random_shapes(d, n, seed):
+        _prop_glm_hvp_shapes(d, n, seed)
 
 
 def test_glm_hvp_linearity(rng):
@@ -105,10 +121,7 @@ def test_flash_attention_bf16(rng, dtype):
                                atol=3e-2, rtol=3e-2)
 
 
-@given(S=st.integers(2, 160), Hkv=st.sampled_from([1, 2, 4]),
-       group=st.sampled_from([1, 2, 4]), seed=st.integers(0, 50))
-@settings(max_examples=15, deadline=None)
-def test_flash_attention_property(S, Hkv, group, seed):
+def _prop_flash_attention(S, Hkv, group, seed):
     rng = np.random.default_rng(seed)
     Hq = Hkv * group
     q = jnp.asarray(rng.standard_normal((1, Hq, S, 32)), jnp.float32)
@@ -117,6 +130,21 @@ def test_flash_attention_property(S, Hkv, group, seed):
     got = flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
     want = ref_attention(q, k, v, causal=True)
     np.testing.assert_allclose(got, want, atol=3e-5, rtol=3e-5)
+
+
+@pytest.mark.parametrize("S,Hkv,group,seed", [
+    (2, 1, 1, 0), (63, 2, 2, 1), (64, 4, 1, 2), (160, 1, 4, 3),
+    (97, 2, 4, 4)])
+def test_flash_attention_gqa_shapes(S, Hkv, group, seed):
+    _prop_flash_attention(S, Hkv, group, seed)
+
+
+if HAVE_HYPOTHESIS:
+    @given(S=st.integers(2, 160), Hkv=st.sampled_from([1, 2, 4]),
+           group=st.sampled_from([1, 2, 4]), seed=st.integers(0, 50))
+    @settings(max_examples=15, deadline=None)
+    def test_flash_attention_property(S, Hkv, group, seed):
+        _prop_flash_attention(S, Hkv, group, seed)
 
 
 def test_flash_rows_are_convex_combinations(rng):

@@ -5,25 +5,12 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from oracles import (make_glm_problem as _problem,
+                     newton_direction_oracle as _dense_newton_direction)
 from repro.core.glm import GLMProblem
 from repro.core.losses import get_loss
 from repro.core.pcg import PCGResult, pcg_features, pcg_samples
 from repro.utils.compat import shard_map
-
-
-def _problem(rng, d=40, n=200, loss="logistic", lam=1e-2):
-    X = rng.standard_normal((d, n)).astype(np.float32)
-    X /= np.linalg.norm(X, axis=0, keepdims=True)
-    y = np.sign(rng.standard_normal(n)).astype(np.float32)
-    w = rng.standard_normal(d).astype(np.float32) * 0.1
-    prob = GLMProblem.create(X, y, loss=loss, lam=lam)
-    return prob, jnp.asarray(w)
-
-
-def _dense_newton_direction(prob, w):
-    H = np.asarray(prob.hessian(w))
-    g = np.asarray(prob.grad(w))
-    return np.linalg.solve(H, g), g
 
 
 def _run_single_device(fn, in_specs, out_specs, axis, *args):

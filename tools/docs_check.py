@@ -34,6 +34,7 @@ LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 PUBLIC_PACKAGES = ["repro.core", "repro.data", "repro.kernels",
                    "repro.utils", "repro.glm_serve", "repro.robust"]
 FUNCTION_MODULES = ["repro.core.comm", "repro.kernels.ops",
+                    "repro.core.hvp", "repro.core.lambda_path",
                     "repro.robust.retry", "repro.robust.checkpoint",
                     "repro.robust.straggler", "repro.robust.faults"]
 
@@ -117,8 +118,33 @@ def check_bench_gates() -> list[str]:
     return errors
 
 
+def check_hvp_matrix() -> list[str]:
+    """docs/kernels.md must embed the HVP dispatch-cell support matrix
+    exactly as the operator registry renders it (between the
+    ``hvp-matrix:begin/end`` markers) — the docs list precisely the
+    supported cells, never a hand-maintained approximation. Regenerate
+    with ``make test-matrix`` after touching the registry."""
+    path = os.path.join(REPO, "docs", "kernels.md")
+    if not os.path.exists(path):
+        return ["docs/kernels.md: missing (holds the HVP support matrix)"]
+    with open(path) as f:
+        text = f.read()
+    begin, end = "<!-- hvp-matrix:begin -->", "<!-- hvp-matrix:end -->"
+    if begin not in text or end not in text:
+        return [f"docs/kernels.md: missing {begin} / {end} markers"]
+    embedded = text.split(begin, 1)[1].split(end, 1)[0].strip()
+    from repro.core.hvp import render_support_matrix
+    want = render_support_matrix().strip()
+    if embedded != want:
+        return ["docs/kernels.md: embedded HVP support matrix is stale — "
+                "regenerate with `make test-matrix` (or paste "
+                "repro.core.hvp.render_support_matrix())"]
+    return []
+
+
 def main() -> int:
-    errors = check_links() + check_docstrings() + check_bench_gates()
+    errors = (check_links() + check_docstrings() + check_bench_gates()
+              + check_hvp_matrix())
     for e in errors:
         print(f"[docs-check] {e}")
     if errors:

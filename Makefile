@@ -4,7 +4,8 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast test-matrix bench bench-smoke bench-sstep \
 	bench-loadbalance bench-streaming bench-serving bench-hvp \
-	bench-faults bench-lambda-path serve-demo docs-check
+	bench-faults bench-lambda-path bench-obs trace-report serve-demo \
+	docs-check
 
 test: docs-check bench-smoke ## tier-1 verify: docs gate + bench smoke + full suite
 	$(PY) -m pytest -x -q
@@ -50,6 +51,12 @@ bench-faults:    ## fault-tolerance gate only (straggler re-plan recovery + retr
 
 bench-lambda-path: ## one-pass lambda-path sweep gate only (>= 2x fewer X passes)
 	$(PY) -m benchmarks.bench_lambda_path
+
+bench-obs:       ## observability gate only (disabled overhead + traced rounds vs ledger)
+	$(PY) -m benchmarks.bench_obs
+
+trace-report:    ## traced demo solves -> critical-path + measured-vs-analytic tables
+	$(PY) tools/trace_report.py
 
 serve-demo:      ## end-to-end serving demo: fit -> publish -> score -> refit -> hot swap
 	$(PY) examples/glm_serve_demo.py

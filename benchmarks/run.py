@@ -25,7 +25,8 @@ def main(argv=None):
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig3,fig4,fig5,table4,"
                          "sstep,loadbalance,streaming,serving,hvp_fused,"
-                         "faults,lambda_path,woodbury,amdahl,roofline")
+                         "faults,lambda_path,obs,woodbury,amdahl,"
+                         "roofline")
     args = ap.parse_args(argv)
 
     if args.smoke:
@@ -41,7 +42,7 @@ def main(argv=None):
             # these run many full fits (or a forced-8-device subprocess)
             return name not in ("fig3", "sstep", "loadbalance",
                                 "streaming", "serving", "hvp_fused",
-                                "faults", "lambda_path")
+                                "faults", "lambda_path", "obs")
         return True
 
     t0 = time.perf_counter()
@@ -80,6 +81,10 @@ def main(argv=None):
     if want("lambda_path"):
         from benchmarks import bench_lambda_path
         bench_lambda_path.run()
+        print()
+    if want("obs"):
+        from benchmarks import bench_obs
+        bench_obs.run()
         print()
     if want("woodbury"):
         from benchmarks import bench_woodbury

@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Any
 
 import jax
@@ -29,6 +30,7 @@ from repro.core import comm
 from repro.core.hvp import StreamedHvpOperator, validate_solver_cell
 from repro.core.losses import get_loss
 from repro.core.pcg import pcg_features, pcg_samples
+from repro.obs import tracer as obs
 from repro.data.partition import Partition, make_partition
 from repro.data.sparse import (CSRMatrix, EllPair, build_shard_ell_pairs,
                                hvp_tile_dtype, shard_csrs_from_partition)
@@ -121,6 +123,13 @@ class DiscoConfig:
         io_deadline_s: per-step wall-clock budget across all attempts
             (0 = no deadline); exceeding it raises
             :class:`repro.robust.retry.StepDeadlineExceeded`.
+        trace: enable the process-global tracing/metrics plane
+            (:mod:`repro.obs`, docs/observability.md) at solver
+            construction — spans, counters and gauges from every layer.
+            Global and sticky (equivalent to ``repro.obs.enable()``;
+            ``REPRO_TRACE=1`` does the same from the environment).
+            Excluded from the checkpoint config fingerprint, so a
+            traced resume of an untraced solve (or vice versa) is fine.
         seed: PRNG seed (Hessian subsampling draws).
     """
 
@@ -151,6 +160,7 @@ class DiscoConfig:
     io_retries: int = 3             # stream-step retries on transient I/O
     io_backoff_s: float = 0.05      # first-retry backoff (doubles each try)
     io_deadline_s: float = 0.0      # per-step wall-clock budget (0 = none)
+    trace: bool = False             # enable the repro.obs tracing plane
     seed: int = 0
 
 
@@ -162,7 +172,8 @@ class DiscoResult:
         w: (d,) solution in the *original* feature order (any internal
             load-balancing permutation and padding is undone).
         history: per-outer-iteration stats dicts (grad_norm, f,
-            pcg_iters, delta, pcg_r_norm, comm_rounds_cum, ...).
+            pcg_iters, delta, pcg_r_norm, ``iter_s`` measured
+            wall-clock, comm_rounds_cum, ...).
         ledger: analytic communication totals (:class:`comm.CommLedger`).
         converged: True iff ||grad|| reached ``cfg.grad_tol``.
         partition_info: sparse solves only — the load-balance summary of
@@ -247,6 +258,8 @@ class DiscoSolver:
         assert y.shape == (X.shape[1],), "X must be (d, n), y (n,)"
         self.cfg = cfg
         self.loss = get_loss(cfg.loss)
+        if cfg.trace:
+            obs.enable()
         validate_solver_cell(family="binary", partition=cfg.partition,
                              fused=cfg.hvp_fused, dtype=cfg.hvp_dtype,
                              sparse=self._sparse,
@@ -665,6 +678,8 @@ class DiscoSolver:
         self._sparse = True
         self.cfg = cfg
         self.loss = get_loss(cfg.loss)
+        if cfg.trace:
+            obs.enable()
         validate_solver_cell(family="binary", partition=cfg.partition,
                              fused=cfg.hvp_fused, dtype=cfg.hvp_dtype,
                              streaming=True)
@@ -976,6 +991,13 @@ class DiscoSolver:
                 c = loss.d2(margins, self.y) * self.smask
                 g = self._stream_x(d1) / n + lam * w
                 gnorm = jnp.sqrt(jnp.vdot(g, g))
+                if obs.enabled():
+                    # host-driven path: count the outer margins/gradient
+                    # rounds at their call site (disco_f_outer_cost)
+                    r_outer = comm.disco_f_outer_cost(n, self.d, m)[0]
+                    obs.count("comm.rounds", r_outer)
+                    for _ in range(r_outer):
+                        obs.instant("comm.allreduce", phase="outer")
                 fval = jnp.sum(loss.value(margins, self.y)
                                * self.smask) / n \
                     + 0.5 * lam * jnp.vdot(w, w)
@@ -1051,6 +1073,11 @@ class DiscoSolver:
                 c = loss.d2(margins, self.y) * self.weights
                 g = self._stream_grad_samples(d1) / n + lam * w
                 gnorm = jnp.sqrt(jnp.vdot(g, g))
+                if obs.enabled():
+                    r_outer = comm.disco_s_outer_cost(self.d)[0]
+                    obs.count("comm.rounds", r_outer)
+                    for _ in range(r_outer):
+                        obs.instant("comm.allreduce", phase="outer")
                 fval = jnp.sum(loss.value(margins, self.y)
                                * self.weights) / n \
                     + 0.5 * lam * jnp.vdot(w, w)
@@ -1172,10 +1199,16 @@ class DiscoSolver:
         return np.asarray(w)[: self.d]
 
     def _cfg_fingerprint(self) -> dict:
-        """JSON-canonical view of ``cfg`` (what checkpoints compare)."""
+        """JSON-canonical view of ``cfg`` (what checkpoints compare).
+
+        ``trace`` is excluded: the observability toggle changes nothing
+        about the solve, so a traced resume of an untraced checkpoint
+        (or vice versa) must not be refused.
+        """
         import json
-        return json.loads(json.dumps(dataclasses.asdict(self.cfg),
-                                     default=float))
+        cfg_dict = dataclasses.asdict(self.cfg)
+        cfg_dict.pop("trace", None)
+        return json.loads(json.dumps(cfg_dict, default=float))
 
     def fit(self, w0: np.ndarray | None = None, *,
             checkpoint_dir: str | None = None, checkpoint_every: int = 1,
@@ -1239,10 +1272,25 @@ class DiscoSolver:
             if self._faults is not None:
                 self._faults.on_outer_step(k)
             key, sub = jax.random.split(key)
-            w, stats = self._step(w, sub)
-            stats = {s: float(v) for s, v in stats.items()}
+            t_it = time.perf_counter()
+            with obs.span("newton.outer", outer_iter=k,
+                          streaming=bool(self._streaming)):
+                w, stats = self._step(w, sub)
+                # the float() syncs pull the step to completion, so the
+                # span (and iter_s) covers real work, not dispatch
+                stats = {name: float(v) for name, v in stats.items()}
+            stats["iter_s"] = time.perf_counter() - t_it
             rounds, floats, spmd = self._comm_costs(int(stats["pcg_iters"]))
             ledger.add(rounds, floats, spmd)
+            obs.count("comm.floats", floats)
+            obs.count("comm.spmd_collectives", spmd)
+            if not self._streaming:
+                # in-memory PCG runs inside a jitted while_loop where
+                # per-round events are invisible; tally the analytic
+                # rounds instead. Streamed solves count at the actual
+                # call sites (step closures + pcg_streamed) — the
+                # independent tally bench_obs cross-checks.
+                obs.count("comm.rounds", rounds)
             stats.update(outer_iter=k, comm_rounds_cum=ledger.rounds,
                          comm_floats_cum=ledger.floats)
             history.append(stats)

@@ -42,6 +42,7 @@ from typing import Callable, NamedTuple
 import jax.numpy as jnp
 
 from repro.data.sparse import EllPair
+from repro.obs import tracer as obs
 
 FAMILIES = ("binary", "softmax")
 LAYOUTS = ("dense", "dense_kernel", "ell", "streamed")
@@ -164,7 +165,10 @@ def validate_solver_cell(*, family: str, partition: str, fused: bool,
         layout = "dense_kernel"
     else:
         layout = "dense"
-    return resolve_cell(family, layout, partition, fused, dtype)
+    cell = resolve_cell(family, layout, partition, fused, dtype)
+    obs.instant("hvp.dispatch",
+                cell=cell_id(family, layout, partition, fused, dtype))
+    return cell
 
 
 def render_support_matrix() -> str:
@@ -409,12 +413,14 @@ class StreamedHvpOperator(HvpOperator):
 
     def apply(self, u):
         """Full streamed product (one pass over the store)."""
-        return self._apply(u)
+        with obs.span("hvp.apply", multi=False, fused=self.fused):
+            return self._apply(u)
 
     def apply_multi(self, U):
         """Batched full streamed product — one chunk read serves every
         column (the s-step x streaming synergy)."""
-        return self._apply_multi(U)
+        with obs.span("hvp.apply", multi=True, fused=self.fused):
+            return self._apply_multi(U)
 
 
 class SoftmaxHvpOperator:

@@ -40,6 +40,7 @@ import zlib
 import numpy as np
 
 from repro.data.sparse import CSRMatrix, iter_libsvm_chunks
+from repro.obs import tracer as obs
 from repro.robust.faults import ChunkCorruptionError
 
 STORE_VERSION = 2        # v2 adds per-chunk + labels CRC32 checksums
@@ -195,17 +196,21 @@ class ShardStore:
         """
         info = self.chunks[i]
         mode = "r" if mmap else None
-        arrays = {f: self._load_field(i, f, mode) for f in _FIELDS}
-        if (self.verify if verify is None else verify) and info.crc:
-            for field, arr in arrays.items():
-                got = _crc(arr)
-                want = info.crc.get(field)
-                if want is not None and got != want:
-                    raise ChunkCorruptionError(
-                        f"chunk {i} field {field!r} of store "
-                        f"{self.path!r} failed its checksum "
-                        f"(crc32 {got:#010x} != header {want:#010x}) — "
-                        "the stored bytes are corrupt")
+        do_verify = (self.verify if verify is None else verify) \
+            and bool(info.crc)
+        with obs.span("store.chunk_read", cid=int(i),
+                      verify=do_verify):
+            arrays = {f: self._load_field(i, f, mode) for f in _FIELDS}
+            if do_verify:
+                for field, arr in arrays.items():
+                    got = _crc(arr)
+                    want = info.crc.get(field)
+                    if want is not None and got != want:
+                        raise ChunkCorruptionError(
+                            f"chunk {i} field {field!r} of store "
+                            f"{self.path!r} failed its checksum "
+                            f"(crc32 {got:#010x} != header {want:#010x}) "
+                            "— the stored bytes are corrupt")
         return CSRMatrix(indptr=arrays["indptr"],
                          indices=arrays["indices"],
                          data=arrays["data"],

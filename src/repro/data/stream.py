@@ -41,6 +41,7 @@ from repro.data.partition import Partition, chunk_partition
 from repro.data.sparse import (CSRMatrix, ell_from_csr, ell_tile_widths,
                                pad_csr_rows)
 from repro.data.store import ShardStore
+from repro.obs import tracer as obs
 from repro.robust.faults import FaultInjector, TransientIOError
 from repro.robust.retry import RetryPolicy, call_with_retries
 from repro.robust.straggler import ChunkTimingLedger
@@ -118,12 +119,13 @@ class ChunkPrefetcher:
     def __init__(self, load_fn: Callable[[int], tuple[object, int]],
                  n_steps: int, depth: int = 2,
                  stats: PrefetchStats | None = None,
-                 retry: RetryPolicy | None = None):
+                 retry: RetryPolicy | None = None, label: str = ""):
         self._load_fn = load_fn
         self._n_steps = int(n_steps)
         self._depth = max(int(depth), 1)
         self.stats = stats if stats is not None else PrefetchStats()
         self._retry = retry
+        self._label = label             # stream.pass span label (tracing)
         self._cancel = threading.Event()
         self._threads: list[threading.Thread] = []
         self._lock = threading.Lock()
@@ -157,6 +159,7 @@ class ChunkPrefetcher:
         stats = self.stats
         with stats._lock:
             stats.passes += 1
+        pass_t0 = time.perf_counter_ns() if obs.enabled() else None
         self._cancel.clear()
         cancel = self._cancel
         q: queue.Queue = queue.Queue(maxsize=self._depth)
@@ -220,6 +223,10 @@ class ChunkPrefetcher:
             with self._lock:
                 if thread in self._threads:
                     self._threads.remove(thread)
+            if pass_t0 is not None:
+                # one span per pass, closed even on early abandonment
+                obs.complete("stream.pass", pass_t0, label=self._label,
+                             steps=self._n_steps)
 
 
 # ---------------------------------------------------------------------------
@@ -307,7 +314,7 @@ class StreamPlan:
                              shape=(self.chunk_size, self.store.other_dim))
         return pad_csr_rows(self.store.chunk_csr(int(cid)), self.chunk_size)
 
-    def _chunk_ells(self, cid: int, kind: str):
+    def _chunk_ells(self, cid: int, kind: str, shard: int = -1):
         """The requested ELL layouts of one chunk, padded to the global
         widths. 'fwd' is the layout of the local (feature-major) matrix,
         'tr' of its transpose — the :class:`repro.data.sparse.EllPair`
@@ -317,29 +324,35 @@ class StreamPlan:
         ``on_chunk_read`` hook (latency + transient errors, when one is
         attached) and their measured read+build seconds feed the
         ``timing_ledger`` — the observations the elastic re-planner
-        balances on.
+        balances on. When tracing is on, each real chunk's read+build
+        is a ``stream.chunk_load`` span attributed to ``shard`` (the
+        per-(shard, phase) axis ``tools/trace_report.py`` aggregates).
         """
-        t0 = time.monotonic()
-        if cid >= 0 and self.fault_injector is not None:
-            self.fault_injector.on_chunk_read(int(cid))
-        slab = self._chunk_slab(cid)
-        br, bc = self.block_rows, self.block_cols
-        if self.store.axis == "samples":
-            slab = slab.transpose()           # local matrix rows = features
-        out = {}
-        if kind in ("fwd", "both"):
-            e = ell_from_csr(slab, br, bc, width=self.w_fwd)
-            out["data"], out["cols"] = e.data, e.cols
-        if kind in ("tr", "both"):
-            e = ell_from_csr(slab.transpose(), bc, br, width=self.w_tr)
-            out["dataT"], out["colsT"] = e.data, e.cols
-        if cid >= 0 and self.timing_ledger is not None:
-            self.timing_ledger.observe(int(cid), time.monotonic() - t0)
+        with obs.span("stream.chunk_load", cid=int(cid),
+                      shard=int(shard), layouts=kind):
+            t0 = time.monotonic()
+            if cid >= 0 and self.fault_injector is not None:
+                self.fault_injector.on_chunk_read(int(cid))
+            slab = self._chunk_slab(cid)
+            br, bc = self.block_rows, self.block_cols
+            if self.store.axis == "samples":
+                slab = slab.transpose()       # local matrix rows = features
+            out = {}
+            if kind in ("fwd", "both"):
+                e = ell_from_csr(slab, br, bc, width=self.w_fwd)
+                out["data"], out["cols"] = e.data, e.cols
+            if kind in ("tr", "both"):
+                e = ell_from_csr(slab.transpose(), bc, br, width=self.w_tr)
+                out["dataT"], out["colsT"] = e.data, e.cols
+            if cid >= 0 and self.timing_ledger is not None:
+                self.timing_ledger.observe(int(cid),
+                                           time.monotonic() - t0)
         return out
 
     def _load_step(self, t: int, kind: str, hvp: bool = False
                    ) -> tuple[dict, int]:
-        per_shard = [self._chunk_ells(int(self.schedule[s, t]), kind)
+        per_shard = [self._chunk_ells(int(self.schedule[s, t]), kind,
+                                      shard=s)
                      for s in range(self.m)]
         stacked = {k: np.stack([p[k] for p in per_shard])
                    for k in per_shard[0]}
@@ -377,7 +390,8 @@ class StreamPlan:
             raise ValueError(f"unknown stream kind {kind!r}")
         return ChunkPrefetcher(
             lambda t: self._load_step(t, kind, hvp), self.n_steps,
-            depth=self.prefetch_depth, stats=self.stats, retry=self.retry)
+            depth=self.prefetch_depth, stats=self.stats, retry=self.retry,
+            label=kind + ("+hvp" if hvp else ""))
 
 
 def _global_ell_widths(store: ShardStore, br: int, bc: int

@@ -45,6 +45,7 @@ import numpy as np
 
 from repro.core.comm import CommLedger
 from repro.core.disco import DiscoConfig, DiscoResult
+from repro.obs import tracer as obs
 from repro.robust.checkpoint import fsync_dir, fsync_file
 from repro.robust.faults import crashpoint
 
@@ -131,8 +132,14 @@ class ModelRegistry:
         ``tests/test_robust.py`` drive every boundary). Returns the new
         version id.
         """
+        with obs.span("registry.publish", activate=activate) as sp:
+            return self._publish(result, cfg, activate, sp)
+
+    def _publish(self, result: DiscoResult, cfg: DiscoConfig,
+                 activate: bool, sp) -> int:
         vs = self.versions()
         version = (vs[-1] + 1) if vs else 1
+        sp.set(version=version)
         final = _vdir(self.path, version)
         versions_dir = os.path.join(self.path, _VERSIONS)
         tmp = os.path.join(versions_dir, f".tmp-{version:06d}")

@@ -30,6 +30,7 @@ from typing import Callable, Optional
 import numpy as np
 
 from repro.glm_serve.scoring import ScoreRequest, ScoringEngine
+from repro.obs import tracer as obs
 
 
 @dataclasses.dataclass
@@ -136,8 +137,21 @@ class MicroBatchScheduler:
 
         Hot-swaps a newly published model version first (between-tick
         is the only safe swap point — mid-batch all slots must score
-        against one ``w``), then admits, scores, completes.
+        against one ``w``), then admits, scores, completes. With
+        tracing on, each tick is a ``serve.tick`` span and the queue
+        depth / tick count ride as obs gauges — serving and solver
+        share one metrics vocabulary (docs/observability.md).
         """
+        obs.gauge("serve.queue_depth", len(self.waiting))
+        with obs.span("serve.tick", tick=self.stats.ticks) as sp:
+            scored = self._tick()
+            sp.set(scored=scored)
+        if scored:
+            obs.count("serve.scored", scored)
+        obs.gauge("serve.ticks", self.stats.ticks)
+        return scored
+
+    def _tick(self) -> int:
         self.engine.maybe_reload()
         now = self.clock()
         batch: list[_Waiting] = []

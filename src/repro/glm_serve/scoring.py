@@ -39,6 +39,7 @@ import numpy as np
 from repro.core.losses import get_loss
 from repro.data.sparse import CSRMatrix, ell_from_csr
 from repro.kernels import ops as kops
+from repro.obs import tracer as obs
 
 
 @dataclasses.dataclass(frozen=True)
@@ -258,17 +259,19 @@ class ScoringEngine:
         v = self.registry.active_version()
         if v is None or v == self.version:
             return False
-        pub = self.registry.load(v)
-        if len(pub.w) != self.packer.d:
-            self.packer = RequestPacker(
-                len(pub.w), self.packer.batch,
-                block_b=self.packer.block_b,
-                block_d=self.packer.block_d, dtype=self.packer.dtype,
-                tile_dtype=self.packer.tile_dtype)
-        self.w = np.asarray(pub.w)
-        self._w_dev = jnp.asarray(self.packer.pad_weights(self.w))
-        self.version = v
-        self.reloads += 1
+        with obs.span("serve.hot_swap", version=int(v)):
+            pub = self.registry.load(v)
+            if len(pub.w) != self.packer.d:
+                self.packer = RequestPacker(
+                    len(pub.w), self.packer.batch,
+                    block_b=self.packer.block_b,
+                    block_d=self.packer.block_d,
+                    dtype=self.packer.dtype,
+                    tile_dtype=self.packer.tile_dtype)
+            self.w = np.asarray(pub.w)
+            self._w_dev = jnp.asarray(self.packer.pad_weights(self.w))
+            self.version = v
+            self.reloads += 1
         return True
 
     # -- scoring -----------------------------------------------------------

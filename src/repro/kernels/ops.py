@@ -22,14 +22,24 @@ from repro.kernels import glm_hvp as _hvp
 from repro.kernels import flash_attention as _fa
 from repro.kernels import ref as _ref
 from repro.kernels import sparse_hvp as _sparse
+from repro.obs import tracer as obs
 from repro.utils.padding import pad_to_multiple as _pad_axis
+
+_seen_dispatch: set[str] = set()    # modes already traced (dedup)
 
 
 def _mode() -> str:
     m = os.environ.get("REPRO_KERNEL_MODE", "auto")
+    resolved = m
     if m == "auto":
-        return "native" if jax.default_backend() == "tpu" else "interpret"
-    return m
+        resolved = ("native" if jax.default_backend() == "tpu"
+                    else "interpret")
+    if obs.enabled() and resolved not in _seen_dispatch:
+        # once per distinct mode, not per call — the eager chunk ops
+        # would otherwise flood the trace with identical instants
+        _seen_dispatch.add(resolved)
+        obs.instant("kernel.dispatch", mode=resolved, env=m)
+    return resolved
 
 
 # VMEM budget for the fused one-pass kernels (docs/kernels.md): the dense

@@ -1,0 +1,41 @@
+"""``repro.obs`` — the unified tracing + metrics plane.
+
+One process-global tracer that every layer emits into: Newton outer
+iterations and streamed PCG rounds (``core``), HVP/kernel dispatch
+(``core``/``kernels``), chunk loads and prefetch passes (``data``),
+retries/checkpoints/replans (``robust``), and registry publishes /
+hot-swaps / scheduler ticks (``glm_serve``). Disabled by default with a
+no-op fast path (≤2% overhead on a tight solve loop, gated by
+``benchmarks/bench_obs.py``); enable with ``DiscoConfig(trace=True)``,
+``REPRO_TRACE=1``, or :func:`enable`. The span vocabulary is closed
+(:data:`SPAN_KINDS` et al.) and drift-gated against
+docs/observability.md by ``tools/docs_check.py``.
+
+Typical use::
+
+    from repro import obs
+
+    tracer = obs.enable(reset=True)
+    solver.fit()
+    obs.export.write_chrome_trace(tracer, "trace.json")   # -> Perfetto
+    obs.disable()
+
+Instrumentation sites call the module-level ``obs.span(...)`` /
+``obs.instant`` / ``obs.count`` / ``obs.gauge`` — two attribute lookups
+and a no-op when disabled.
+"""
+from repro.obs import export, report
+from repro.obs.tracer import (COUNTER_KINDS, GAUGE_KINDS, SPAN_KINDS,
+                              NoopTracer, Span, TraceEvent, Tracer,
+                              complete, count, disable, enable, enabled,
+                              gauge, get_tracer, instant,
+                              render_span_kinds, span)
+
+__all__ = [
+    "SPAN_KINDS", "COUNTER_KINDS", "GAUGE_KINDS",
+    "Tracer", "NoopTracer", "Span", "TraceEvent",
+    "enable", "disable", "enabled", "get_tracer",
+    "span", "instant", "complete", "count", "gauge",
+    "render_span_kinds",
+    "export", "report",
+]

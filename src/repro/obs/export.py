@@ -1,0 +1,90 @@
+"""Exporters for the in-process tracer (docs/observability.md).
+
+Two output formats:
+
+* :func:`chrome_trace` — Chrome trace-event JSON ("trace event format",
+  the JSON-array flavour). Load the written file straight into
+  https://ui.perfetto.dev (or chrome://tracing) to see the span
+  timeline, one track per thread — the chunk-prefetch producer thread
+  shows up as its own lane next to the solver's main thread.
+* :func:`summary_rows` — flat, JSON-scalar rows (one per span kind +
+  one per counter/gauge) shaped for the schema-checked
+  ``benchmarks.common.validate_bench_record`` / ``write_bench_record``
+  path, so a traced run can ship its summary through the same validated
+  pipe every benchmark uses.
+"""
+from __future__ import annotations
+
+import json
+
+from repro.obs.tracer import Tracer
+
+
+def chrome_trace(tracer: Tracer) -> list[dict]:
+    """Convert a tracer's events to Chrome trace-event dicts.
+
+    Emits one ``M`` (metadata) event naming each thread, then one
+    ``X`` (complete, with ``dur``) or ``i`` (instant, thread-scoped)
+    event per recorded span/instant. Timestamps are microseconds
+    relative to the tracer's epoch, as the format requires.
+    """
+    events, counters, gauges = tracer.snapshot()
+    out: list[dict] = []
+    named: set[int] = set()
+    for ev in events:
+        if ev.tid not in named:
+            named.add(ev.tid)
+            out.append({"ph": "M", "name": "thread_name", "pid": 1,
+                        "tid": ev.tid, "args": {"name": ev.thread}})
+        rec = {"name": ev.kind, "ph": ev.ph, "pid": 1, "tid": ev.tid,
+               "ts": (ev.t0_ns - tracer.epoch_ns) / 1e3,
+               "args": ev.args}
+        if ev.ph == "X":
+            rec["dur"] = ev.dur_ns / 1e3
+        else:
+            rec["s"] = "t"              # thread-scoped instant
+        out.append(rec)
+    if counters or gauges:
+        out.append({"ph": "M", "name": "process_labels", "pid": 1,
+                    "tid": 0,
+                    "args": {"labels": json.dumps(
+                        {"counters": counters, "gauges": gauges})}})
+    return out
+
+
+def write_chrome_trace(tracer: Tracer, path: str) -> str:
+    """Write :func:`chrome_trace` output as a Perfetto-loadable JSON
+    file; returns ``path``."""
+    with open(path, "w") as f:
+        json.dump(chrome_trace(tracer), f)
+    return path
+
+
+def summary_rows(tracer: Tracer) -> list[dict]:
+    """Aggregate the trace into flat rows (one per span kind, then one
+    per counter and gauge) with JSON-scalar values only — the row shape
+    ``benchmarks.common.validate_bench_record`` accepts."""
+    events, counters, gauges = tracer.snapshot()
+    agg: dict[str, dict] = {}
+    for ev in events:
+        a = agg.setdefault(ev.kind, {"kind": ev.kind, "events": 0,
+                                     "total_s": 0.0, "max_ms": 0.0})
+        a["events"] += 1
+        dur_s = ev.dur_ns / 1e9
+        a["total_s"] += dur_s
+        a["max_ms"] = max(a["max_ms"], dur_s * 1e3)
+    rows = []
+    for kind in sorted(agg):
+        a = agg[kind]
+        rows.append({"kind": kind, "events": int(a["events"]),
+                     "total_s": float(a["total_s"]),
+                     "max_ms": float(a["max_ms"])})
+    for name in sorted(counters):
+        rows.append({"kind": f"counter:{name}", "events": 1,
+                     "total_s": 0.0, "value": float(counters[name]),
+                     "max_ms": 0.0})
+    for name in sorted(gauges):
+        rows.append({"kind": f"gauge:{name}", "events": 1,
+                     "total_s": 0.0, "value": float(gauges[name]),
+                     "max_ms": 0.0})
+    return rows

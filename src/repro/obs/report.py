@@ -1,0 +1,104 @@
+"""Trace aggregation + measured-vs-analytic comparison.
+
+The report side of the observability plane: turn a recorded trace into
+(1) a per-(shard, kind) critical-path table — which shard's chunk loads
+gate each phase — and (2) a per-outer-iteration table diffing the
+*measured* wall-clock (``iter_s`` in ``DiscoResult.history``) against
+the *analytic* prediction of :func:`repro.core.comm.disco_sparse_iter_time`
+/ :func:`repro.core.comm.disco_streaming_iter_time`. The CLI wrapper is
+``tools/trace_report.py``; ``benchmarks/bench_obs.py`` reuses the same
+aggregations for its gates.
+"""
+from __future__ import annotations
+
+from repro.obs.tracer import Tracer
+
+
+def span_rows(tracer: Tracer) -> list[dict]:
+    """Aggregate spans per (shard, kind).
+
+    The shard key comes from a span's ``shard`` arg (chunk loads carry
+    one; solver-wide spans aggregate under ``"-"``). Each row carries
+    event count, total/mean/max duration, and ``critical=True`` on the
+    shard with the largest total per kind — the straggler that gates
+    that phase's barrier.
+    """
+    events, _, _ = tracer.snapshot()
+    agg: dict[tuple[str, str], dict] = {}
+    for ev in events:
+        if ev.ph != "X":
+            continue
+        shard = str(ev.args.get("shard", "-"))
+        key = (shard, ev.kind)
+        a = agg.setdefault(key, {"shard": shard, "kind": ev.kind,
+                                 "events": 0, "total_s": 0.0,
+                                 "max_ms": 0.0})
+        a["events"] += 1
+        dur_s = ev.dur_ns / 1e9
+        a["total_s"] += dur_s
+        a["max_ms"] = max(a["max_ms"], dur_s * 1e3)
+    rows = []
+    for (shard, kind) in sorted(agg):
+        a = agg[(shard, kind)]
+        rows.append({"shard": shard, "kind": kind,
+                     "events": int(a["events"]),
+                     "total_s": float(a["total_s"]),
+                     "mean_ms": float(a["total_s"] / a["events"] * 1e3),
+                     "max_ms": float(a["max_ms"]),
+                     "critical": False})
+    # flag the straggler: per kind, the shard with the largest total
+    by_kind: dict[str, dict] = {}
+    for r in rows:
+        best = by_kind.get(r["kind"])
+        if best is None or r["total_s"] > best["total_s"]:
+            by_kind[r["kind"]] = r
+    for r in by_kind.values():
+        r["critical"] = True
+    return rows
+
+
+def measured_vs_predicted(history: list[dict], shard_nnz, partition: str,
+                          n: int, d: int, m: int, s: int = 1, *,
+                          hvp_fused: bool = False,
+                          hvp_dtype: str = "float32",
+                          streaming: bool = False,
+                          chunk_nnz_max: int | None = None,
+                          prefetch_depth: int = 2) -> list[dict]:
+    """Per-outer-iteration rows diffing measured vs analytic time.
+
+    For each history entry with an ``iter_s`` wall-clock, evaluates the
+    matching ``comm.py`` iteration-time model at that iteration's
+    actual ``pcg_iters`` and reports measured, predicted and their
+    ratio. The first iteration is flagged ``compile=True`` — its
+    measurement includes jit tracing/compilation, so its ratio is not
+    meaningful (the analytic model only covers steady state).
+    """
+    from repro.core import comm  # deferred: core itself imports repro.obs
+
+    dtype_bytes = 2 if hvp_dtype == "bfloat16" else comm.BYTES_PER_FLOAT
+    rows = []
+    for i, h in enumerate(history):
+        if "iter_s" not in h:
+            continue
+        iters = max(1, int(h.get("pcg_iters", 1)))
+        if streaming:
+            pred = comm.disco_streaming_iter_time(
+                shard_nnz, iters, partition, n=n, d=d, m=m, s=s,
+                chunk_nnz_max=int(chunk_nnz_max or 1),
+                prefetch_depth=prefetch_depth, hvp_fused=hvp_fused,
+                hvp_dtype_bytes=dtype_bytes)
+        else:
+            pred = comm.disco_sparse_iter_time(
+                shard_nnz, iters, partition, n=n, d=d, m=m, s=s,
+                hvp_fused=hvp_fused, hvp_dtype_bytes=dtype_bytes)
+        measured = float(h["iter_s"])
+        predicted = float(pred["total_s"])
+        rows.append({
+            "outer_iter": int(h.get("outer_iter", i)),
+            "pcg_iters": iters,
+            "measured_s": measured,
+            "predicted_s": predicted,
+            "ratio": measured / predicted if predicted > 0 else 0.0,
+            "compile": i == 0,
+        })
+    return rows

@@ -36,6 +36,8 @@ import os
 
 import numpy as np
 
+from repro.obs import tracer as obs
+
 CHECKPOINT_VERSION = 1
 _STATE = "state.json"
 _W = "w.npy"
@@ -97,6 +99,11 @@ def save_checkpoint(path: str, state: CheckpointState) -> str:
     Atomic and fsync'd at every step (see the module docstring's write
     protocol); older snapshots beyond the newest ``2`` are pruned.
     """
+    with obs.span("ckpt.write", next_iter=int(state.next_iter)):
+        return _save_checkpoint(path, state)
+
+
+def _save_checkpoint(path: str, state: CheckpointState) -> str:
     os.makedirs(path, exist_ok=True)
     it = int(state.next_iter)
     tmp = os.path.join(path, f".tmp-it-{it:08d}")

@@ -20,6 +20,8 @@ import dataclasses
 import time
 from typing import Callable
 
+from repro.obs import tracer as obs
+
 
 class StepDeadlineExceeded(RuntimeError):
     """A retried step ran out of its wall-clock budget (hung I/O)."""
@@ -77,6 +79,9 @@ def call_with_retries(fn: Callable[[], object], policy: RetryPolicy,
             return fn()
         except retryable as e:
             last = e
+            obs.instant("io.retry", attempt=attempt,
+                        error=type(e).__name__)
+            obs.count("io.retries")
             if attempt >= policy.max_retries:
                 raise
             policy.sleep(policy.backoff_s

@@ -33,6 +33,8 @@ import threading
 
 import numpy as np
 
+from repro.obs import tracer as obs
+
 
 def barrier_seconds(schedule: np.ndarray,
                     chunk_seconds: np.ndarray) -> float:
@@ -220,4 +222,7 @@ class ElasticReplanner:
                             barrier_s_after=after)
         self.events.append(event)
         self._obs_floor = min_count + self.cooldown
+        obs.instant("robust.replan", trigger=trigger,
+                    outer_iter=int(outer_iter), moved_chunks=int(moved),
+                    observed_straggler=float(observed))
         return new_plan, event

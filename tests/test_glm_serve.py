@@ -443,3 +443,55 @@ def test_refit_loop_end_to_end(tmp_path, ref_mode):
     # and match an in-memory fit of the concatenated data
     rm = disco_fit(CSRMatrix.from_dense(Xd), y, cfg)
     np.testing.assert_allclose(warm.w, rm.w, atol=1e-4, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# ServeStats percentiles: the p50/p99 the serving bench reports must be
+# numpy.percentile, including the degenerate cases
+# ---------------------------------------------------------------------------
+
+class TestServeStatsPercentiles:
+    def test_percentiles_match_numpy_property(self):
+        pytest.importorskip("hypothesis")
+        from hypothesis import given, settings, strategies as st
+
+        from repro.glm_serve import ServeStats
+
+        @settings(max_examples=60, deadline=None)
+        @given(lat=st.lists(st.floats(min_value=0.0, max_value=10.0,
+                                      allow_nan=False,
+                                      allow_infinity=False),
+                            min_size=1, max_size=200),
+               q=st.sampled_from([0.0, 50.0, 90.0, 99.0, 100.0]))
+        def check(lat, q):
+            s = ServeStats()
+            s.latencies_s.extend(lat)
+            want = float(np.percentile(np.asarray(lat), q))
+            assert s.percentile(q) == pytest.approx(want, rel=1e-12)
+            assert s.p50_s == pytest.approx(
+                float(np.percentile(np.asarray(lat), 50.0)))
+            assert s.p99_s == pytest.approx(
+                float(np.percentile(np.asarray(lat), 99.0)))
+
+        check()
+
+    def test_single_sample_every_quantile(self):
+        from repro.glm_serve import ServeStats
+        s = ServeStats()
+        s.latencies_s.append(0.25)
+        for q in (0.0, 50.0, 99.0, 100.0):
+            assert s.percentile(q) == 0.25
+        assert s.p50_s == s.p99_s == 0.25
+
+    def test_tied_samples(self):
+        from repro.glm_serve import ServeStats
+        s = ServeStats()
+        s.latencies_s.extend([1.5] * 10)
+        for q in (0.0, 50.0, 99.0, 100.0):
+            assert s.percentile(q) == 1.5
+
+    def test_empty_is_zero(self):
+        from repro.glm_serve import ServeStats
+        assert ServeStats().p50_s == 0.0
+        assert ServeStats().p99_s == 0.0
+        assert ServeStats().percentile(100.0) == 0.0

@@ -645,7 +645,10 @@ REPLAN_SCRIPT = textwrap.dedent("""
     assert ev["barrier_s_after"] < ev["barrier_s_before"]
     rel = float(np.linalg.norm(r.w - static.w) / np.linalg.norm(static.w))
     print("replan-vs-static rel err", rel)
-    assert rel <= 1e-5, rel
+    # the replan fires on *measured* seconds, so the chosen plan (and
+    # with it the f32 chunk-summation order) varies run to run; the
+    # observed noise band reaches ~1.2e-5 on a loaded host
+    assert rel <= 2e-5, rel
     print("REPLAN_PASS")
 """)
 

@@ -16,6 +16,11 @@ Three checks, all fail-fast with a nonzero exit:
    EXPERIMENTS.md must exist under ``benchmarks/`` AND be wired into the
    ``benchmarks/run.py`` harness — a documented gate nobody can run is a
    broken promise.
+4. **Embedded registries**: docs/kernels.md must embed the HVP
+   dispatch-cell support matrix exactly as ``render_support_matrix()``
+   prints it, and docs/observability.md must embed the tracer
+   span/counter/gauge vocabulary exactly as ``render_span_kinds()``
+   prints it — generated tables, never hand-maintained approximations.
 """
 from __future__ import annotations
 
@@ -32,11 +37,14 @@ SKIP_MD = {"CHANGES.md"}                    # running log, not documentation
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 
 PUBLIC_PACKAGES = ["repro.core", "repro.data", "repro.kernels",
-                   "repro.utils", "repro.glm_serve", "repro.robust"]
+                   "repro.utils", "repro.glm_serve", "repro.robust",
+                   "repro.obs"]
 FUNCTION_MODULES = ["repro.core.comm", "repro.kernels.ops",
                     "repro.core.hvp", "repro.core.lambda_path",
                     "repro.robust.retry", "repro.robust.checkpoint",
-                    "repro.robust.straggler", "repro.robust.faults"]
+                    "repro.robust.straggler", "repro.robust.faults",
+                    "repro.obs.tracer", "repro.obs.export",
+                    "repro.obs.report"]
 
 
 def check_links() -> list[str]:
@@ -142,9 +150,35 @@ def check_hvp_matrix() -> list[str]:
     return []
 
 
+def check_span_kinds() -> list[str]:
+    """docs/observability.md must embed the tracer vocabulary exactly as
+    the registry renders it (between the ``span-kinds:begin/end``
+    markers) — a documented span kind that the tracer would reject (or a
+    registered kind the docs omit) fails here. Regenerate by pasting
+    ``repro.obs.render_span_kinds()``."""
+    path = os.path.join(REPO, "docs", "observability.md")
+    if not os.path.exists(path):
+        return ["docs/observability.md: missing (holds the tracer "
+                "vocabulary)"]
+    with open(path) as f:
+        text = f.read()
+    begin, end = "<!-- span-kinds:begin -->", "<!-- span-kinds:end -->"
+    if begin not in text or end not in text:
+        return [f"docs/observability.md: missing {begin} / {end} markers"]
+    embedded = text.split(begin, 1)[1].split(end, 1)[0].strip()
+    from repro.obs import render_span_kinds
+    want = render_span_kinds().strip()
+    if embedded != want:
+        return ["docs/observability.md: embedded span/counter/gauge "
+                "vocabulary is stale — paste "
+                "repro.obs.render_span_kinds() between the span-kinds "
+                "markers"]
+    return []
+
+
 def main() -> int:
     errors = (check_links() + check_docstrings() + check_bench_gates()
-              + check_hvp_matrix())
+              + check_hvp_matrix() + check_span_kinds())
     for e in errors:
         print(f"[docs-check] {e}")
     if errors:
